@@ -1,0 +1,59 @@
+"""Aggregate the dry-run + roofline JSONs into the §Dry-run / §Roofline
+tables (markdown written to benchmarks/results/, rows returned as CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, list_archs
+from repro.configs.shapes import shape_applicable
+
+DRYRUN_DIR = "benchmarks/results/dryrun"
+ROOFLINE_DIR = "benchmarks/results/roofline"
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+    rows = []
+    md = ["| arch | shape | dominant | compute_s | memory_s | collective_s | useful | peak GB/dev |",
+          "|---|---|---|---|---|---|---|---|"]
+    n_done = 0
+    for arch in list_archs():
+        for shape in INPUT_SHAPES:
+            if not shape_applicable(arch, shape):
+                continue
+            p = os.path.join(ROOFLINE_DIR, f"{arch}_{shape}.json")
+            if not os.path.exists(p):
+                continue
+            d = _load(p)
+            t = d["terms"]
+            peak = d["memory_per_device"]["peak_bytes_per_device"] / 2**30
+            md.append(
+                f"| {arch} | {shape} | {t['dominant']} | {t['compute_s']:.4f} | "
+                f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+                f"{d['useful_ratio']:.2f} | {peak:.1f} |"
+            )
+            n_done += 1
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
+        f.write("\n".join(md) + "\n")
+
+    pods = {"pod1": 0, "pod2": 0}
+    for p in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        for k in pods:
+            if p.endswith(k + ".json"):
+                pods[k] += 1
+    rows.append(("roofline_combos_analyzed", 0.0, f"{n_done} arch×shape rooflines"))
+    rows.append(("dryrun_combos_compiled", 0.0,
+                 f"single-pod={pods['pod1']} multi-pod={pods['pod2']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

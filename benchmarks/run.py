@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+Prints ``name,us_per_call,derived`` CSV; detailed artifacts under
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import adaptive_sebs, fig1_util, fig2_optimal_batch, fig3_stagewise
+from benchmarks import kernel_bench, roofline_report, table1_updates
+
+MODULES = {
+    "fig1": fig1_util,
+    "fig2": fig2_optimal_batch,
+    "fig3": fig3_stagewise,
+    "table1": table1_updates,
+    "kernels": kernel_bench,
+    "roofline": roofline_report,
+    "adaptive": adaptive_sebs,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            for row in MODULES[name].run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name},0,FAILED: {e!r}", flush=True)
+            traceback.print_exc(limit=6)
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

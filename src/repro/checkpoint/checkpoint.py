@@ -1,0 +1,80 @@
+"""Pytree checkpointing: npz tensors + json metadata.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` (flattened path-keyed leaves) and
+``meta.json`` (step, schedule state, pipeline state). Restore rebuilds the
+tree onto the caller's target structure (and shardings, if given).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """Returns (arrays, dtype_map). Dtypes numpy can't serialize natively
+    (bfloat16) are stored as a uint16 view + an entry in dtype_map."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out, dtypes = {}, {}
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        key = SEP.join(parts)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            dtypes[key] = "bfloat16"
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out, dtypes
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, meta: Optional[dict] = None) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    arrays, dtypes = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, "_dtypes": dtypes, **(meta or {})}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, target: Any, shardings: Any = None):
+    """Restore onto ``target``'s structure. Returns (tree, meta)."""
+    import ml_dtypes
+
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    dtype_map = meta.pop("_dtypes", {})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
+    for (kpath, leaf), sh in zip(flat, shard_leaves):
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in kpath]
+        key = SEP.join(parts)
+        arr = data[key]
+        if dtype_map.get(key) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

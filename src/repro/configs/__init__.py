@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    BlockSpec,
+    MeshConfig,
+    ModelConfig,
+    SEBSConfig,
+    SegmentSpec,
+    ServeConfig,
+    TrainConfig,
+)
+from repro.configs.registry import ARCHS, get_config, list_archs
+from repro.configs.shapes import INPUT_SHAPES, input_specs, shape_applicable
+
+__all__ = [
+    "BlockSpec",
+    "MeshConfig",
+    "ModelConfig",
+    "SEBSConfig",
+    "SegmentSpec",
+    "ServeConfig",
+    "TrainConfig",
+    "ARCHS",
+    "get_config",
+    "list_archs",
+    "INPUT_SHAPES",
+    "input_specs",
+    "shape_applicable",
+]

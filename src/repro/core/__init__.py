@@ -1,0 +1,38 @@
+# The paper's primary contribution: the SEBS batch-size schedule system —
+# schedules, stage controller, theory calculators, and the SEBS trainer that
+# drives the distributed train step with stagewise-enlarged batches.
+from repro.core.schedules import (
+    SEBS,
+    ClassicalStagewise,
+    DBSGD,
+    EpochStagewise,
+    Schedule,
+    SmithBatch,
+    StageInfo,
+    WarmupConstant,
+)
+from repro.core.stages import StageController, StepPlan
+from repro.core.theory import SEBSTheory, optimal_batch, optimal_ratio, psi_bound, psi_min
+from repro.core.noise_scale import AdaptiveSEBS, GradientNoiseScale
+from repro.core.trainer import SEBSTrainer
+
+__all__ = [
+    "SEBS",
+    "ClassicalStagewise",
+    "DBSGD",
+    "EpochStagewise",
+    "Schedule",
+    "SmithBatch",
+    "StageInfo",
+    "WarmupConstant",
+    "StageController",
+    "StepPlan",
+    "SEBSTheory",
+    "optimal_batch",
+    "optimal_ratio",
+    "psi_bound",
+    "psi_min",
+    "SEBSTrainer",
+    "AdaptiveSEBS",
+    "GradientNoiseScale",
+]

@@ -1,0 +1,4 @@
+from repro.data.synthetic import TokenDataset, QuadraticProblem, make_batch_iterator
+from repro.data.pipeline import DataPipeline
+
+__all__ = ["TokenDataset", "QuadraticProblem", "make_batch_iterator", "DataPipeline"]

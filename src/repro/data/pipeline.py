@@ -1,0 +1,48 @@
+"""Sharded data pipeline with SEBS-driven dynamic batch sizes.
+
+The pipeline is indexed by *samples consumed*, not steps: the SEBS stage
+controller converts the consumed-sample count into the current stage's
+batch size, and the pipeline materializes exactly that many new samples
+as the next batch, placing them on the mesh with the batch axes sharded
+over (pod, data). Determinism: batch contents depend only on
+(seed, sample_offset), so a run is bit-reproducible across stage layouts
+and restarts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.data.synthetic import TokenDataset
+from repro.sharding import batch_spec
+
+
+class DataPipeline:
+    def __init__(self, ds: TokenDataset, mesh: Optional[Mesh] = None):
+        self.ds = ds
+        self.mesh = mesh
+        self.samples_consumed = 0
+        self._batch_index = 0
+
+    def next_batch(self, batch_size: int) -> dict:
+        batch = self.ds.batch(self._batch_index, batch_size)
+        self._batch_index += 1
+        self.samples_consumed += batch_size
+        if self.mesh is not None and not self.mesh.empty:
+            sharding = NamedSharding(self.mesh, batch_spec(self.mesh, extra_dims=1))
+            batch = {k: jax.device_put(v, sharding) for k, v in batch.items()}
+        return batch
+
+    def state(self) -> dict:
+        return {
+            "samples_consumed": self.samples_consumed,
+            "batch_index": self._batch_index,
+        }
+
+    def restore(self, state: dict) -> None:
+        self.samples_consumed = int(state["samples_consumed"])
+        self._batch_index = int(state["batch_index"])

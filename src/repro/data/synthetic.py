@@ -1,0 +1,135 @@
+"""Deterministic synthetic datasets.
+
+- :class:`TokenDataset` — an infinite, index-addressable LM token stream
+  with a learnable structure (Zipf-distributed unigrams + a Markov kick) so
+  training losses actually *decrease*; batch ``i`` is a pure function of
+  ``(seed, i)``: any worker can materialize any batch without coordination,
+  which is what makes the SEBS dynamic-batch pipeline deterministic across
+  stage boundaries and across data-parallel shards.
+- :class:`QuadraticProblem` — the paper's synthetic problem (Eq. 11):
+  ``F(w) = (1/2n) Σ (w−ξᵢ)ᵀ D (w−ξᵢ)``, D = diag(1..d), ξᵢ ~ N(0, I),
+  used to reproduce Fig. 2 (optimal batch size vs ‖w₁−w*‖).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenDataset:
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, index: int, batch_size: int) -> dict:
+        """Deterministic batch: tokens (B, S+1) int32 (inputs+shifted labels)."""
+        key = jax.random.fold_in(jax.random.key(self.seed), index)
+        b, s = batch_size, self.seq_len + 1
+        # Zipf-ish marginal via squared uniform, plus a deterministic motif:
+        # token_{t+1} depends on token_t for 25% of positions.
+        u = jax.random.uniform(key, (b, s))
+        base = (jnp.square(u) * self.vocab_size).astype(jnp.int32)
+        rolled = jnp.roll(base, 1, axis=1)
+        motif = (rolled * 31 + 7) % self.vocab_size
+        pick = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.25, (b, s))
+        tokens = jnp.where(pick, motif, base)
+        return {"tokens": tokens}
+
+
+@dataclass(frozen=True)
+class QuadraticProblem:
+    """Paper Eq. (11). alpha=1, mu=1, L=d (D=diag(1..d))."""
+
+    n: int = 10_000
+    d: int = 100
+    seed: int = 42
+
+    @property
+    def data(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.standard_normal((self.n, self.d)).astype(np.float32)
+
+    @property
+    def diag(self) -> np.ndarray:
+        return np.arange(1, self.d + 1, dtype=np.float32)
+
+    @property
+    def w_star(self) -> np.ndarray:
+        return self.data.mean(axis=0)
+
+    def loss(self, w: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
+        """Mean loss over a batch xi (B, d)."""
+        diff = w[None, :] - xi
+        return 0.5 * jnp.mean(jnp.sum(diff * diff * jnp.asarray(self.diag)[None, :], axis=-1))
+
+    def full_loss(self, w: jnp.ndarray) -> jnp.ndarray:
+        return self.loss(w, jnp.asarray(self.data))
+
+    def grad(self, w: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
+        return jax.grad(self.loss)(w, xi)
+
+    def sample_batch(self, key, batch_size: int) -> jnp.ndarray:
+        idx = jax.random.randint(key, (batch_size,), 0, self.n)
+        return jnp.asarray(self.data)[idx]
+
+    # constants from the paper for this problem
+    alpha: float = 1.0
+    mu: float = 1.0
+
+    @property
+    def L(self) -> float:
+        return float(self.d)
+
+
+@dataclass(frozen=True)
+class ImageClassDataset:
+    """Synthetic CIFAR-shaped classification (paper Fig. 3 analog): each of
+    ``num_classes`` classes is a fixed random spatial template; a sample is
+    template + per-sample Gaussian noise. Finite train set of size ``n`` (so
+    a generalization gap exists and overfitting is possible), infinite test
+    stream from the same distribution."""
+
+    n: int = 20_000
+    num_classes: int = 10
+    image_size: int = 16
+    channels: int = 3
+    noise: float = 1.0
+    seed: int = 0
+
+    def _templates(self):
+        key = jax.random.key(self.seed)
+        return jax.random.normal(
+            key, (self.num_classes, self.image_size, self.image_size, self.channels)
+        )
+
+    def _example(self, key, index):
+        label = jax.random.randint(jax.random.fold_in(key, 0), (), 0, self.num_classes)
+        noise = self.noise * jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (self.image_size, self.image_size, self.channels),
+        )
+        return self._templates()[label] + noise, label
+
+    def train_batch(self, key, batch_size: int) -> dict:
+        """Sample WITH replacement from the finite n-element train set."""
+        idx = jax.random.randint(key, (batch_size,), 0, self.n)
+        keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(self.seed + 1), i))(idx)
+        x, y = jax.vmap(self._example)(keys, idx)
+        return {"image": x, "label": y}
+
+    def test_batch(self, key, batch_size: int) -> dict:
+        keys = jax.random.split(jax.random.fold_in(key, 999), batch_size)
+        x, y = jax.vmap(self._example)(keys, jnp.arange(batch_size))
+        return {"image": x, "label": y}
+
+
+def make_batch_iterator(ds: TokenDataset, batch_size: int, start: int = 0) -> Iterator[dict]:
+    i = start
+    while True:
+        yield ds.batch(i, batch_size)
+        i += 1

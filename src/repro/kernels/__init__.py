@@ -1,0 +1,13 @@
+# Pallas TPU kernels for the framework's compute hot-spots. Each kernel
+# subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (the jit'd
+# public wrapper) and ref.py (pure-jnp oracle used by the allclose tests):
+#   flash_attention/ — blockwise online-softmax attention (GQA, causal,
+#                      sliding window), the train/prefill hot-spot;
+#   fused_optim/     — SEBS optimizer updates (pSGD proximal step, momentum,
+#                      dual-averaging AdaGrad) fused into one HBM round-trip
+#                      over each weight shard;
+#   gla/             — chunked gated-linear-attention scan shared by the
+#                      Mamba2 (SSD) and RWKV6 mixers.
+#
+# TPU is the TARGET; on this CPU container the kernels are validated in
+# interpret=True mode (the kernel body runs step-by-step in Python).

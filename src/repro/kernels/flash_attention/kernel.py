@@ -1,0 +1,115 @@
+"""Flash attention for TPU (Pallas): blockwise online-softmax.
+
+Grid: (batch·q_heads, Sq/BQ, Sk/BK) — the innermost k-block axis
+accumulates into VMEM scratch (o_acc f32, running max m, running sum l)
+with @pl.when init at the first k block and normalization at the last.
+Block shapes are MXU-aligned (BQ, BK multiples of 128 when the sequence
+allows; head_dim is the lane dim).
+
+GQA is handled in the BlockSpec index maps: q head h reads kv head
+h // (Hq/Hkv) — no materialized KV repetition.
+
+Causal/sliding-window masks are applied per (q,k) block; fully-masked
+blocks still iterate (Pallas TPU grids are static) but their contribution
+is the identity of the online-softmax update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, o_acc, m_acc, l_acc,
+    *, bq: int, bk: int, sk: int, causal: bool, window: Optional[int], scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_acc[...] = jnp.zeros_like(o_acc)
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)          # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+
+    sq_total = pl.num_programs(1) * bq
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq_total)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_acc[...]                     # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                  # (BQ, BK)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)         # (BQ, 1)
+    l_new = l_acc[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_new = o_acc[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ()))
+    )
+    m_acc[...] = m_new
+    l_acc[...] = l_new
+    o_acc[...] = o_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (o_acc[...] / jnp.maximum(l_acc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jnp.ndarray,  # (B*Hq, Sq, D)
+    k: jnp.ndarray,  # (B*Hkv, Sk, D)
+    v: jnp.ndarray,
+    *,
+    group: int,      # Hq // Hkv
+    causal: bool,
+    window: Optional[int],
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bhq, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    grid = (bhq, sq // bq, sk // bk)
+    scale = d**-0.5
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sk=sk, causal=causal, window=window, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),  # o accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Public jit'd wrapper: (B, S, H, D) layout in, GQA-aware, TPU kernel or
+interpret fallback on CPU."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "sliding_window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    interp = (not _is_tpu()) if interpret is None else interpret
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], d)
+    out = flash_attention_bhsd(
+        qf, kf, vf, group=group, causal=causal, window=sliding_window,
+        block_q=block_q, block_k=block_k, interpret=interp,
+    )
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

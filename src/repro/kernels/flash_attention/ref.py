@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel: dense softmax attention
+with GQA, causal and sliding-window masks. Layout (B, S, H, D)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+) -> jnp.ndarray:
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bsngh,btnh->bngst", qg, k.astype(jnp.float32)) * d**-0.5
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned positions
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window is not None:
+        mask &= k_pos > q_pos - sliding_window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

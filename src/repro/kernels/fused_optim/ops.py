@@ -1,0 +1,36 @@
+"""Public jit'd wrappers for the fused optimizer updates, used by
+``repro.optim`` when ``use_fused=True``."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_optim.kernel import adagrad_blocked, momentum_blocked, psgd_blocked
+
+
+def _interp(interpret: Optional[bool]) -> bool:
+    return (jax.default_backend() != "tpu") if interpret is None else interpret
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "interpret"))
+def psgd_update(w, g, anchor, *, lr, gamma: float, interpret: Optional[bool] = None):
+    return psgd_blocked(w, g, anchor, lr, gamma=gamma, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def momentum_update(w, g, u, *, lr, beta: float, interpret: Optional[bool] = None):
+    new_w, new_u = momentum_blocked(w, g, u, lr, beta=beta, interpret=_interp(interpret))
+    return new_w, new_u
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "nu", "interpret"))
+def adagrad_da_update(
+    w, g, anchor, z, s2, *, lr, delta: float, nu: float, interpret: Optional[bool] = None
+):
+    new_w, new_z, new_s2 = adagrad_blocked(
+        w, g, anchor, z, s2, lr, delta=delta, nu=nu, interpret=_interp(interpret)
+    )
+    return new_w, new_z, new_s2

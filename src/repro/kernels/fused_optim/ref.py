@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the fused SEBS optimizer updates. These are exactly
+the formulas in repro.optim (pSGD closed-form proximal step, Polyak
+momentum, dual-averaging AdaGrad), kept standalone so kernel tests don't
+depend on optimizer plumbing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def psgd_ref(w, g, anchor, *, lr: float, gamma: float):
+    wf, gf, af = (x.astype(jnp.float32) for x in (w, g, anchor))
+    out = (gamma * (wf - lr * gf) + lr * af) / (gamma + lr)
+    return out.astype(w.dtype)
+
+
+def momentum_ref(w, g, u, *, lr: float, beta: float):
+    new_u = beta * u.astype(jnp.float32) - lr * g.astype(jnp.float32)
+    new_w = (w.astype(jnp.float32) + new_u).astype(w.dtype)
+    return new_w, new_u
+
+
+def adagrad_da_ref(w, g, anchor, z, s2, *, lr: float, delta: float, nu: float):
+    gf = g.astype(jnp.float32)
+    new_z = z.astype(jnp.float32) + gf
+    new_s2 = s2.astype(jnp.float32) + jnp.square(gf)
+    h = jnp.power(delta**2 + new_s2, nu)
+    new_w = (anchor.astype(jnp.float32) - lr * new_z / h).astype(w.dtype)
+    return new_w, new_z, new_s2

@@ -1,0 +1,131 @@
+"""Chunked gated-linear-attention kernel (Pallas TPU) — the training-time
+hot path for the Mamba2 (SSD) and RWKV6 mixers.
+
+Grid: (B·H, S/Q) with the chunk axis innermost — the (K,V) f32 state lives
+in VMEM scratch and carries across chunk iterations (TPU grids execute
+sequentially, which Pallas guarantees for scratch reuse).
+
+Per chunk of Q steps (all in VMEM):
+    W  = cumsum(log_w)                      (Q,K)  inclusive decay prefix
+    E  = W (Mamba2) | W − log_w (RWKV6: readout uses S_{t-1})
+    A[t,u] = Σ_c q[t,c]·k[u,c]·exp(E[t,c]−W[u,c])   masked u≤t / u<t
+    y  = A @ v + (q⊙exp(E)) @ S + bonus     intra + inter + RWKV u-bonus
+    S ← S ⊙ exp(W_Q) + (k⊙exp(W_Q−W))ᵀ @ v  chunk-end state
+
+The pairwise decay matrix is accumulated channel-by-channel as (Q,Q)
+tiles — exponent differences are ≤ 0 on unmasked entries, so the exp is
+overflow-safe at any decay strength (masked entries are set to −inf
+*before* the exp). This is the numerical-stability reason the chunked form
+needs a kernel: the pure-jnp equivalent would materialize (Q,Q,K).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _gla_kernel(
+    q_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sfinal_ref, state,
+    *, chunk: int, kdim: int, include_current: bool, use_bonus: bool,
+):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)    # (Q, K)
+    k = k_ref[0].astype(jnp.float32)    # (Q, K)
+    v = v_ref[0].astype(jnp.float32)    # (Q, V)
+    lw = lw_ref[0].astype(jnp.float32)  # (Q, K)
+
+    w_prefix = jnp.cumsum(lw, axis=0)               # (Q,K) inclusive
+    e = w_prefix if include_current else w_prefix - lw
+    w_total = w_prefix[-1, :]                       # (K,)
+
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (u_idx <= t_idx) if include_current else (u_idx < t_idx)
+
+    def channel_body(c, acc):
+        diff = e[:, c][:, None] - w_prefix[:, c][None, :]  # (Q,Q), ≤0 masked
+        diff = jnp.where(mask, diff, NEG_INF)
+        return acc + q[:, c][:, None] * k[:, c][None, :] * jnp.exp(diff)
+
+    a = jax.lax.fori_loop(0, kdim, channel_body, jnp.zeros((chunk, chunk), jnp.float32))
+    y = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())))          # intra
+    y += jax.lax.dot_general(q * jnp.exp(e), state[...], (((1,), (0,)), ((), ())))  # inter
+    if use_bonus:
+        coeff = jnp.sum(q * u_ref[0].astype(jnp.float32) * k, axis=1, keepdims=True)
+        y += coeff * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decayed_k = k * jnp.exp(w_total[None, :] - w_prefix)             # (Q,K)
+    state[...] = state[...] * jnp.exp(w_total)[:, None] + jax.lax.dot_general(
+        decayed_k, v, (((0,), (0,)), ((), ()))
+    )
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sfinal_ref[0] = state[...]
+
+
+def gla_chunked_bh(
+    q: jnp.ndarray,   # (BH, S, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,   # (BH, S, V)
+    log_w: jnp.ndarray,
+    bonus_u: Optional[jnp.ndarray],  # (BH, K) or None
+    initial_state: Optional[jnp.ndarray],  # (BH, K, V) or None
+    *,
+    include_current: bool,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    bh, s, kd = q.shape
+    vd = v.shape[-1]
+    qc = min(chunk, s)
+    assert s % qc == 0, f"seq {s} % chunk {qc}"
+    grid = (bh, s // qc)
+    use_bonus = bonus_u is not None and not include_current
+    u_in = bonus_u if bonus_u is not None else jnp.zeros((bh, kd), jnp.float32)
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bh, kd, vd), jnp.float32)
+    )
+
+    kernel = functools.partial(
+        _gla_kernel, chunk=qc, kdim=kd, include_current=include_current, use_bonus=use_bonus
+    )
+    y, sfinal = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qc, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, qc, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, qc, vd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, qc, kd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, kd), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, kd, vd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qc, vd), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, kd, vd), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, vd), v.dtype),
+            jax.ShapeDtypeStruct((bh, kd, vd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kd, vd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_w, u_in, s0)
+    return y, sfinal

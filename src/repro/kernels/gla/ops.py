@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the chunked GLA kernel, (B, S, H, ·) layout."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gla.kernel import gla_chunked_bh
+
+
+@functools.partial(jax.jit, static_argnames=("include_current", "chunk", "interpret"))
+def gla_chunked(
+    q: jnp.ndarray,       # (B, S, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,       # (B, S, H, V)
+    log_w: jnp.ndarray,   # (B, S, H, K)
+    *,
+    bonus_u: Optional[jnp.ndarray] = None,        # (H, K)
+    include_current: bool = True,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, K, V)
+    chunk: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, kd = q.shape
+    vd = v.shape[-1]
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+
+    def to_bh(t, feat):
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, feat)
+
+    u_bh = jnp.tile(bonus_u, (b, 1)) if bonus_u is not None else None
+    s0_bh = initial_state.reshape(b * h, kd, vd) if initial_state is not None else None
+    y, sfinal = gla_chunked_bh(
+        to_bh(q, kd), to_bh(k, kd), to_bh(v, vd), to_bh(log_w, kd),
+        u_bh, s0_bh, include_current=include_current, chunk=chunk, interpret=interp,
+    )
+    y = y.reshape(b, h, s, vd).transpose(0, 2, 1, 3)
+    return y, sfinal.reshape(b, h, kd, vd)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the chunked GLA kernel: the exact per-step
+recurrence (same math as repro.models.layers.linear_attention.gla_scan,
+restated standalone).
+
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t,   w_t = exp(log_w_t)
+    y_t = q_t · S_t                        (include_current=True; Mamba2)
+    y_t = q_t · (S_{t-1} + diag(u) k_t⊗v_t)  (include_current=False; RWKV6)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_ref(
+    q: jnp.ndarray,       # (B, S, H, K)
+    k: jnp.ndarray,       # (B, S, H, K)
+    v: jnp.ndarray,       # (B, S, H, V)
+    log_w: jnp.ndarray,   # (B, S, H, K)
+    *,
+    bonus_u: Optional[jnp.ndarray] = None,  # (H, K)
+    include_current: bool = True,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, K, V)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, h, kd = q.shape
+    vd = v.shape[-1]
+    state = (
+        jnp.zeros((b, h, kd, vd), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, xs):
+        qt, kt, vt, lwt = xs
+        qt, kt, vt = (t.astype(jnp.float32) for t in (qt, kt, vt))
+        wt = jnp.exp(lwt.astype(jnp.float32))[..., None]
+        outer = kt[..., :, None] * vt[..., None, :]
+        new_state = state * wt + outer
+        if include_current:
+            read = new_state
+        else:
+            read = state + (
+                bonus_u.astype(jnp.float32)[None, :, :, None] * outer
+                if bonus_u is not None
+                else 0.0
+            )
+        yt = jnp.einsum("bhk,bhkv->bhv", qt, read)
+        return new_state, yt
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_w))
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), final

@@ -1,0 +1,86 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --variant smoke --schedule sebs --rho 4 --stages 3 --b1 8 \
+        --c1 256 --seq 64 --steps-log 5
+
+Smoke/CPU-sized by default; the full configs are exercised via
+launch/dryrun.py (this host has one device). On a real TPU slice the same
+entry point runs the production mesh (``--mesh single|multi``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.core import SEBS, ClassicalStagewise, SEBSTrainer
+from repro.data import DataPipeline, TokenDataset
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+from repro.utils.log import get_logger
+
+log = get_logger("train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--schedule", default="sebs", choices=["sebs", "classical"])
+    ap.add_argument("--optimizer", default="psgd")
+    ap.add_argument("--gamma", type=float, default=1e4)
+    ap.add_argument("--eta", type=float, default=0.3)
+    ap.add_argument("--b1", type=int, default=8)
+    ap.add_argument("--c1", type=int, default=256)
+    ap.add_argument("--rho", type=float, default=4.0)
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mode", default="accumulate", choices=["accumulate", "reshape"])
+    ap.add_argument("--accum-mode", default="psum_each", choices=["psum_each", "deferred", "unrolled"])
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--steps-log", type=int, default=5)
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    cfg = get_config(args.arch, args.variant)
+    model = build_model(cfg)
+    opt_kwargs = {"gamma": args.gamma} if args.optimizer == "psgd" else {}
+    optimizer = make_optimizer(args.optimizer, **opt_kwargs)
+
+    if args.schedule == "sebs":
+        schedule = SEBS(b1=args.b1, C1=args.c1, rho=args.rho, num_stages=args.stages, eta=args.eta)
+    else:
+        schedule = ClassicalStagewise(b=args.b1, C1=args.c1, rho=args.rho,
+                                      num_stages=args.stages, eta1=args.eta)
+
+    ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+    trainer = SEBSTrainer(
+        model, optimizer, schedule, DataPipeline(ds, mesh),
+        mesh=mesh, microbatch=args.b1, mode=args.mode, accum_mode=args.accum_mode,
+    )
+    params, _ = model.init(jax.random.key(0))
+    state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+    state, tlog = trainer.run(state, log_every=args.steps_log)
+    for i in range(len(tlog.steps)):
+        log.info("update %4d samples %6d stage %d batch %4d loss %.4f",
+                 tlog.steps[i], tlog.samples[i], tlog.stages[i],
+                 tlog.batch_sizes[i], tlog.losses[i])
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, int(state.step), state.params,
+                               meta={"samples": tlog.samples[-1]})
+        log.info("checkpoint written to %s", path)
+
+
+if __name__ == "__main__":
+    main()

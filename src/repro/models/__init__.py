@@ -1,0 +1,4 @@
+from repro.models.lm import LanguageModel
+from repro.models.zoo import build_model
+
+__all__ = ["LanguageModel", "build_model"]

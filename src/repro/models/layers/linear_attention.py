@@ -1,0 +1,114 @@
+"""Gated linear attention recurrence — the shared math behind Mamba2 (SSD)
+and RWKV6 (Finch).
+
+State: ``S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t`` with per-(head, k-channel)
+decay ``w_t = exp(log_w_t) ∈ (0, 1]``; readout either
+
+- ``y_t = q_t · S_t``              (Mamba2: current token included), or
+- ``y_t = q_t · (S_{t-1} + diag(u) k_t ⊗ v_t)``  (RWKV6: ``u`` bonus).
+
+The pure-JAX path below is an exact ``lax.scan`` over the sequence: it keeps
+HLO size O(1) in sequence length (one while loop), which is what the
+multi-pod dry-runs lower. The TPU-performance implementation is the chunked
+Pallas kernel in ``repro.kernels`` (same math, VMEM-tiled, validated against
+this scan).
+
+Shapes: q, k, log_w: (B, S, H, K); v: (B, S, H, V); state: (B, H, K, V).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+GLA_CHUNK = 64  # checkpoint interval: states saved only at chunk boundaries
+
+
+def gla_scan(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    *,
+    bonus_u: Optional[jnp.ndarray] = None,
+    include_current: bool = True,
+    initial_state: Optional[jnp.ndarray] = None,
+    chunk: int = GLA_CHUNK,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B,S,H,V), final_state: (B,H,K,V)). f32 state accumulator.
+
+    Two-level scan: an outer scan over chunks whose body is
+    ``jax.checkpoint``-wrapped — the backward pass saves states only at the
+    nc = S/chunk boundaries and rematerializes within a chunk (without this,
+    scan AD keeps per-step (B,H,K,V) states: ~80 GB/device on zamba2
+    train_4k)."""
+    b, s, h, kdim = q.shape
+    vdim = v.shape[-1]
+    s0 = (
+        jnp.zeros((b, h, kdim, vdim), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inputs):
+        qt, kt, vt, lwt = inputs  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        qt32, kt32, vt32 = qt.astype(jnp.float32), kt.astype(jnp.float32), vt.astype(jnp.float32)
+        wt = jnp.exp(lwt.astype(jnp.float32))[..., None]  # (B,H,K,1)
+        outer = kt32[..., :, None] * vt32[..., None, :]  # (B,H,K,V)
+        new_state = state * wt + outer
+        if include_current:
+            readout = new_state
+        else:
+            readout = state + (bonus_u.astype(jnp.float32)[None, :, :, None] * outer if bonus_u is not None else 0.0)
+        yt = jnp.einsum("bhk,bhkv->bhv", qt32, readout)
+        return new_state, yt
+
+    if s % chunk or s <= chunk:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_w))
+        final_state, ys = jax.lax.scan(step, s0, xs)
+        return jnp.moveaxis(ys, 0, 1).astype(v.dtype), final_state
+
+    nc = s // chunk
+
+    def chunk_body(state, inputs):
+        return jax.lax.scan(step, state, inputs)
+
+    chunk_body = jax.checkpoint(chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def to_chunks(t):  # (B,S,...) -> (nc, chunk, B, ...)
+        t = jnp.moveaxis(t, 1, 0).reshape((nc, chunk) + t.shape[:1] + t.shape[2:])
+        return t
+
+    xs = tuple(to_chunks(t) for t in (q, k, v, log_w))
+    final_state, ys = jax.lax.scan(chunk_body, s0, xs)  # ys: (nc, chunk, B,H,V)
+    y = jnp.moveaxis(ys.reshape((s,) + ys.shape[2:]), 0, 1).astype(v.dtype)
+    return y, final_state
+
+
+def gla_step(
+    state: jnp.ndarray,
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_w: jnp.ndarray,
+    *,
+    bonus_u: Optional[jnp.ndarray] = None,
+    include_current: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. q,k,log_w: (B,H,K); v: (B,H,V); state (B,H,K,V).
+
+    Returns (y: (B,H,V), new_state)."""
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    wt = jnp.exp(log_w.astype(jnp.float32))[..., None]
+    outer = k32[..., :, None] * v32[..., None, :]
+    new_state = state.astype(jnp.float32) * wt + outer
+    if include_current:
+        readout = new_state
+    else:
+        readout = state.astype(jnp.float32) + (
+            bonus_u.astype(jnp.float32)[None, :, :, None] * outer if bonus_u is not None else 0.0
+        )
+    y = jnp.einsum("bhk,bhkv->bhv", q32, readout).astype(v.dtype)
+    return y, new_state

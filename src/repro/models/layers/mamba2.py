@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) mixer [arXiv:2405.21060], as used by zamba2-2.7b.
+
+Structure: in_proj → (x, z, B, C, dt); short causal depthwise conv over
+(x,B,C); selective state-space recurrence with per-head scalar decay
+``a_t = exp(dt_t * A)`` realized through the shared gated-linear-attention
+scan; gated output ``y * silu(z)``; out_proj.
+
+Decode keeps two cache entries per layer: the SSM state (B,H,hd,state) and
+the rolling conv window (B, conv_w-1, conv_channels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.linear_attention import gla_scan, gla_step
+from repro.sharding import constrain
+from repro.utils.prng import fold_in_name
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_ch
+
+
+def init(key, cfg, name: str = "mamba"):
+    d = cfg.d_model
+    d_in, nh, conv_ch = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = fold_in_name(key, name)
+    ks = jax.random.split(k, 4)
+    proj_out = 2 * d_in + 2 * cfg.ssm_state + nh  # x, z, B, C, dt
+    params = {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) * d**-0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), dtype) * d_in**-0.5,
+        "norm_scale": jnp.zeros((d_in,), dtype),
+    }
+    axes = {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv_width", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "out_proj": ("ssm_inner", "embed"),
+        "norm_scale": ("ssm_inner",),
+    }
+    return params, axes
+
+
+def init_cache(cfg, batch: int, dtype):
+    d_in, nh, conv_ch = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+CACHE_AXES = {
+    "ssm": ("batch", "ssm_heads", "ssm_state", None),
+    "conv": ("batch", None, "ssm_inner"),
+}
+
+
+def _split_proj(proj, cfg, d_in, nh):
+    x = proj[..., :d_in]
+    z = proj[..., d_in : 2 * d_in]
+    bmat = proj[..., 2 * d_in : 2 * d_in + cfg.ssm_state]
+    cmat = proj[..., 2 * d_in + cfg.ssm_state : 2 * d_in + 2 * cfg.ssm_state]
+    dt = proj[..., 2 * d_in + 2 * cfg.ssm_state :]
+    return x, z, bmat, cmat, dt
+
+
+def _gated_norm(params, y, z, eps):
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = yf * (var + eps) ** -0.5 * (1.0 + params["norm_scale"].astype(jnp.float32))
+    return (yn * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype)
+
+
+def apply(params, x, cfg, *, cache=None, cache_index=None):
+    """x: (B,S,d). Returns (y, new_cache)."""
+    b, s, d = x.shape
+    d_in, nh, conv_ch = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    dtype = x.dtype
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(dtype))
+    proj = constrain(proj, ("batch", "seq", "ssm_inner"))
+    xin, z, bmat, cmat, dt = _split_proj(proj, cfg, d_in, nh)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)  # (B,S,conv_ch)
+
+    decode = cache is not None and s == 1 and cache_index is not None
+    new_cache = cache
+    w = params["conv_w"].astype(dtype)  # (W, conv_ch)
+    if decode:
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,ch)
+        conv_out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :] + params["conv_b"].astype(dtype)
+        new_conv = window[:, 1:, :]
+    else:
+        # causal depthwise conv: left-pad by (W-1), feature_group per channel
+        conv_out = jax.lax.conv_general_dilated(
+            conv_in.astype(jnp.float32),
+            w.astype(jnp.float32)[:, None, :],  # (W, 1, ch) as (spatial, in/group, out)
+            window_strides=(1,),
+            padding=[(cfg.ssm_conv_width - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=conv_ch,
+        ).astype(dtype) + params["conv_b"].astype(dtype)
+        new_conv = (
+            jnp.concatenate(
+                [jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), dtype), conv_in], axis=1
+            )[:, -(cfg.ssm_conv_width - 1) :, :]
+            if cache is not None
+            else None
+        )
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dtype)
+    xin = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in : d_in + cfg.ssm_state]
+    cmat = conv_out[..., d_in + cfg.ssm_state :]
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(params["A_log"])  # (H,) negative
+    log_decay = dtp * a  # (B,S,H)  log a_t = dt * A
+
+    xh = xin.reshape(b, s, nh, hd)
+    # linear-attention mapping: q=C, k=B (shared over heads), v=dt*x
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, nh, cfg.ssm_state))
+    kk = jnp.broadcast_to(bmat[:, :, None, :], (b, s, nh, cfg.ssm_state))
+    vv = (xh.astype(jnp.float32) * dtp[..., None]).astype(dtype)
+    lw = jnp.broadcast_to(log_decay[..., None], (b, s, nh, cfg.ssm_state))
+
+    if decode:
+        y1, new_state = gla_step(
+            cache["ssm"], q[:, 0], kk[:, 0], vv[:, 0], lw[:, 0], include_current=True
+        )
+        y = y1[:, None]  # (B,1,H,hd)
+        new_cache = {"ssm": new_state, "conv": new_conv}
+    else:
+        init_state = None
+        y, final_state = gla_scan(q, kk, vv, lw, include_current=True, initial_state=init_state)
+        if cache is not None:
+            new_cache = {"ssm": final_state, "conv": new_conv}
+    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y.astype(dtype), params["out_proj"].astype(dtype))
+    out_axes = (
+        ("batch", "seq_sp", "embed")
+        if getattr(cfg, "tp_reduce_scatter", False)
+        else ("batch", "seq", "embed")
+    )
+    return constrain(out, out_axes), new_cache

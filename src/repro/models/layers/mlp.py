@@ -1,0 +1,48 @@
+"""SwiGLU MLP (llama/qwen/gemma family). GELU variant for whisper."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from repro.utils.prng import fold_in_name
+
+
+def init(key, cfg, name: str = "mlp", d_ff: int | None = None, gelu: bool = False):
+    d = cfg.d_model
+    dff = d_ff if d_ff is not None else cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = fold_in_name(key, name)
+    ks = jax.random.split(k, 3)
+    params = {
+        "w_gate": jax.random.normal(ks[0], (d, dff), dtype) * d**-0.5,
+        "w_up": jax.random.normal(ks[1], (d, dff), dtype) * d**-0.5,
+        "w_down": jax.random.normal(ks[2], (dff, d), dtype) * dff**-0.5,
+    }
+    axes = {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+    if gelu:
+        params.pop("w_gate")
+        axes.pop("w_gate")
+    return params, axes
+
+
+def apply(params, x, cfg=None):
+    dtype = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+    if "w_gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dtype))
+    out_axes = (
+        ("batch", "seq_sp", "embed")
+        if cfg is not None and getattr(cfg, "tp_reduce_scatter", False)
+        else ("batch", "seq", "embed")
+    )
+    return constrain(y, out_axes)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with GShard/Switch-style grouped capacity dispatch.
+
+Covers both assigned MoE archs: arctic-480b (128 experts, top-2, plus a
+dense "residual" MLP in parallel) and dbrx-132b (16 experts, top-4).
+
+Dispatch is *grouped*: the (batch, seq) token axis is split into groups of
+``group_size`` tokens; each group independently routes its tokens into a
+per-expert capacity buffer ``C = ceil(top_k * group_size / E * cf)``. The
+dispatch/combine tensors are (B, G, T, E, C) — linear in sequence length —
+and the expert GEMMs see (E, ..., C, d) operands whose expert dimension is
+sharded over the ``model`` mesh axis (expert parallelism); groups stay on
+the ``data`` axis, so GSPMD inserts the all-to-all between them.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+from repro.utils.prng import fold_in_name
+
+GROUP_SIZE = 1024
+CAPACITY_FACTOR = 1.25
+
+
+def init(key, cfg, name: str = "moe"):
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = fold_in_name(key, name)
+    ks = jax.random.split(k, 4)
+    params = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d**-0.5,
+        "w_gate": jax.random.normal(ks[1], (e, d, dff), dtype) * d**-0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, dff), dtype) * d**-0.5,
+        "w_down": jax.random.normal(ks[3], (e, dff, d), dtype) * dff**-0.5,
+    }
+    axes = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    return params, axes
+
+
+def _dispatch_tensors(probs, top_k: int, capacity: int):
+    """probs: (..., T, E) -> dispatch (..., T, E, C) bool, combine same float."""
+    e = probs.shape[-1]
+    _, top_idx = jax.lax.top_k(probs, top_k)  # (..., T, k)
+    onehots = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)  # (..., T, k, E)
+    # assign positions within each expert's capacity buffer, slot-major so
+    # slot 0 (highest prob) wins ties, matching GShard.
+    flat = jnp.moveaxis(onehots, -2, -3)  # (..., k, T, E)
+    shape = flat.shape
+    kt = flat.reshape(shape[:-3] + (shape[-3] * shape[-2], e))  # (..., k*T, E)
+    pos_in_expert = jnp.cumsum(kt, axis=-2) - kt  # (..., k*T, E)
+    pos = (pos_in_expert * kt).sum(-1)  # (..., k*T)
+    keep = (pos < capacity) & (kt.sum(-1) > 0)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=probs.dtype) * keep[..., None]
+    disp_kt = kt.astype(probs.dtype)[..., None] * pos_oh[..., None, :]  # (...,k*T,E,C)
+    disp = disp_kt.reshape(shape[:-3] + (shape[-3], shape[-2], e, capacity))
+    disp = jnp.moveaxis(disp, -4, -3).sum(-3)  # sum over k slots -> (...,T,E,C)
+    combine = disp * probs[..., None]
+    return disp, combine
+
+
+def apply(params, x, cfg, *, group_size: int | None = None):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    gs = min(group_size or GROUP_SIZE, s)
+    n = s // gs
+    assert n * gs == s, f"seq {s} not divisible by group size {gs}"
+    cf = getattr(cfg, "moe_capacity_factor", CAPACITY_FACTOR)
+    capacity = max(1, math.ceil(k * gs / e * cf))
+
+    xg = x.reshape(b, n, gs, d)
+    logits = jnp.einsum("bngd,de->bnge", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    disp, combine = _dispatch_tensors(probs, k, capacity)
+    disp = disp.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    disp = constrain(disp, ("batch", None, "seq", "experts", None))
+    xe = jnp.einsum("bngec,bngd->bnecd", disp, xg)
+    xe = constrain(xe, ("batch", None, "experts", None, "embed"))
+
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    gate = jnp.einsum("bnecd,edf->bnecf", xe, wg)
+    up = jnp.einsum("bnecd,edf->bnecf", xe, wu)
+    h = jax.nn.silu(gate) * up
+    h = constrain(h, ("batch", None, "experts", None, "mlp"))
+    ye = jnp.einsum("bnecf,efd->bnecd", h, wd)
+    y = jnp.einsum("bngec,bnecd->bngd", combine, ye)
+    y = y.reshape(b, s, d)
+
+    # load-balance auxiliary loss (Switch-style)
+    token_frac = disp.astype(jnp.float32).sum((-1,)).mean(axis=-2)  # (b,n,e) frac per expert
+    prob_frac = probs.mean(axis=-2)
+    aux = e * jnp.mean(jnp.sum(token_frac * prob_frac, axis=-1))
+    out_axes = (
+        ("batch", "seq_sp", "embed")
+        if getattr(cfg, "tp_reduce_scatter", False)
+        else ("batch", "seq", "embed")
+    )
+    return constrain(y, out_axes), aux

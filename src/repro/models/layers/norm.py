@@ -1,0 +1,19 @@
+"""RMSNorm (the only norm used by the assigned decoder archs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init(d: int, dtype=jnp.float32):
+    params = {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+    axes = {"scale": ("embed",)}
+    return params, axes
+
+
+def apply(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    out = normed * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(dtype)

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (half-rotation form used by llama/qwen/gemma)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv = _freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,193 @@
+"""RWKV6 "Finch" mixers [arXiv:2404.05892]: time-mix (attention-free token
+mixer with data-dependent per-channel decay) and channel-mix (the RWKV FFN).
+
+Time-mix per head h (head_dim = cfg.rwkv_head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+with w_t = exp(-exp(w_base + LoRA(x̄_t))) data-dependent (the Finch change
+vs RWKV5), realized through the shared gated-linear-attention scan.
+Token-shift ("x̄") states make decode O(1): the cache stores the previous
+token's activations plus the (H, K, V) wkv state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.linear_attention import gla_scan, gla_step
+from repro.sharding import constrain
+from repro.utils.prng import fold_in_name
+
+DECAY_LORA = 64
+
+
+def _dims(cfg):
+    hd = cfg.rwkv_head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def init_time_mix(key, cfg, name: str = "tmix"):
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = fold_in_name(key, name)
+    ks = jax.random.split(k, 8)
+    s = d**-0.5
+    params = {
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "w_r": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_lora_a": jax.random.normal(ks[5], (d, DECAY_LORA), jnp.float32) * s,
+        "decay_lora_b": jax.random.normal(ks[6], (DECAY_LORA, d), jnp.float32) * DECAY_LORA**-0.5,
+        "bonus_u": jnp.zeros((nh, hd), jnp.float32),
+        "ln_scale": jnp.zeros((d,), dtype),  # per-head group-norm scale
+    }
+    axes = {
+        "mu_r": ("embed",),
+        "mu_k": ("embed",),
+        "mu_v": ("embed",),
+        "mu_w": ("embed",),
+        "mu_g": ("embed",),
+        "w_r": ("embed", "heads"),
+        "w_k": ("embed", "heads"),
+        "w_v": ("embed", "heads"),
+        "w_g": ("embed", "heads"),
+        "w_o": ("heads", "embed"),
+        "decay_base": ("embed",),
+        "decay_lora_a": ("embed", None),
+        "decay_lora_b": (None, "embed"),
+        "bonus_u": ("ssm_heads", None),
+        "ln_scale": ("embed",),
+    }
+    return params, axes
+
+
+def init_channel_mix(key, cfg, name: str = "cmix"):
+    d, dff = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    k = fold_in_name(key, name)
+    ks = jax.random.split(k, 3)
+    params = {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_k": jax.random.normal(ks[0], (d, dff), dtype) * d**-0.5,
+        "w_v": jax.random.normal(ks[1], (dff, d), dtype) * dff**-0.5,
+        "w_r": jax.random.normal(ks[2], (d, d), dtype) * d**-0.5,
+    }
+    axes = {
+        "mu_k": ("embed",),
+        "mu_r": ("embed",),
+        "w_k": ("embed", "mlp"),
+        "w_v": ("mlp", "embed"),
+        "w_r": ("embed", "heads"),
+    }
+    return params, axes
+
+
+def init_cache(cfg, batch: int, dtype):
+    nh, hd = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),  # prev token (time-mix)
+        "shift_c": jnp.zeros((batch, d), dtype),  # prev token (channel-mix)
+    }
+
+
+CACHE_AXES = {
+    "wkv": ("batch", "ssm_heads", None, None),
+    "shift_t": ("batch", "embed"),
+    "shift_c": ("batch", "embed"),
+}
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) previous token (or zeros). Returns x_{t-1}."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def apply_time_mix(params, x, cfg, *, cache=None, decode: bool = False):
+    """Returns (y, new_wkv_state, new_shift). x: (B,S,d)."""
+    b, s, d = x.shape
+    nh, hd = _dims(cfg)
+    dtype = x.dtype
+    prev = cache["shift_t"] if cache is not None else jnp.zeros((b, d), dtype)
+    x_prev = _token_shift(x, prev)
+
+    xr = _lerp(x, x_prev, params["mu_r"])
+    xk = _lerp(x, x_prev, params["mu_k"])
+    xv = _lerp(x, x_prev, params["mu_v"])
+    xw = _lerp(x, x_prev, params["mu_w"])
+    xg = _lerp(x, x_prev, params["mu_g"])
+
+    r = jnp.einsum("bsd,de->bse", xr, params["w_r"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", xk, params["w_k"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", xv, params["w_v"].astype(dtype))
+    g = jnp.einsum("bsd,de->bse", xg, params["w_g"].astype(dtype))
+    # data-dependent decay (Finch): w = exp(-exp(base + lora))
+    lora = jnp.einsum(
+        "bsd,dl,le->bse",
+        jnp.tanh(xw.astype(jnp.float32)),
+        params["decay_lora_a"],
+        params["decay_lora_b"],
+    )
+    log_w = -jnp.exp(params["decay_base"] + lora)  # (B,S,d), < 0
+
+    r = constrain(r, ("batch", "seq", "heads")).reshape(b, s, nh, hd)
+    kh = k.reshape(b, s, nh, hd)
+    vh = v.reshape(b, s, nh, hd)
+    lwh = log_w.reshape(b, s, nh, hd)
+
+    if decode:
+        y1, new_state = gla_step(
+            cache["wkv"], r[:, 0], kh[:, 0], vh[:, 0], lwh[:, 0],
+            bonus_u=params["bonus_u"], include_current=False,
+        )
+        y = y1[:, None]
+        new_shift = x[:, -1, :]
+    else:
+        init_state = cache["wkv"] if cache is not None else None
+        y, new_state = gla_scan(
+            r, kh, vh, lwh, bonus_u=params["bonus_u"], include_current=False,
+            initial_state=init_state,
+        )
+        new_shift = x[:, -1, :]
+
+    # per-head group norm, then gate and output projection
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = yf * (var + cfg.norm_eps) ** -0.5
+    yn = yn.reshape(b, s, d) * (1.0 + params["ln_scale"].astype(jnp.float32))
+    yn = (yn * jax.nn.silu(g.astype(jnp.float32))).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", yn, params["w_o"].astype(dtype))
+    return constrain(out, ("batch", "seq", "embed")), new_state, new_shift
+
+
+def apply_channel_mix(params, x, cfg, *, cache=None):
+    """Returns (y, new_shift)."""
+    b, s, d = x.shape
+    dtype = x.dtype
+    prev = cache["shift_c"] if cache is not None else jnp.zeros((b, d), dtype)
+    x_prev = _token_shift(x, prev)
+    xk = _lerp(x, x_prev, params["mu_k"])
+    xr = _lerp(x, x_prev, params["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, params["w_k"].astype(dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, ("batch", "seq", "mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["w_v"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["w_r"].astype(dtype)).astype(jnp.float32))
+    return constrain((r * kv.astype(jnp.float32)).astype(dtype), ("batch", "seq", "embed")), x[:, -1, :]

@@ -1,0 +1,169 @@
+"""The composable language model: embeddings → scanned segments → logits.
+
+Covers all assigned families through :class:`ModelConfig`:
+
+- decoder-only (dense / MoE / SSM / hybrid): ``forward`` (train),
+  ``prefill`` and ``decode_step`` (serving, KV/state cache);
+- encoder-decoder (whisper): an extra non-causal encoder segment consuming
+  stubbed frame embeddings (the conv/mel frontend is out of scope per the
+  brief); the decoder cross-attends to encoder memory;
+- VLM backbone (internvl2): stubbed patch embeddings enter through a
+  trainable 2-layer projector and replace the first ``num_vision_tokens``
+  token embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SegmentSpec, BlockSpec, VISION_EMBED_DIM
+from repro.models import blocks
+from repro.models.layers import embedding, norm, mlp
+from repro.sharding import constrain
+from repro.utils.prng import fold_in_name
+
+
+
+class LanguageModel:
+    """Functional model: ``params = lm.init(key)``, then ``lm.forward`` etc.
+
+    Stateless; all methods are pure functions of (params, inputs) and are
+    safe to ``jax.jit`` / ``shard_map``.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> tuple[Any, Any]:
+        """Returns (params, logical_axes) trees with matching structure."""
+        cfg = self.cfg
+        params, axes = {}, {}
+        p, a = embedding.init(key, cfg)
+        params["embed"], axes["embed"] = p, a
+        for i, seg in enumerate(cfg.segments):
+            p, a = blocks.init_segment(key, cfg, seg, name=f"seg{i}")
+            params[f"seg{i}"], axes[f"seg{i}"] = p, a
+        p, a = norm.init(cfg.d_model, jnp.dtype(cfg.param_dtype))
+        params["final_norm"], axes["final_norm"] = p, a
+
+        if cfg.is_encoder_decoder:
+            enc_seg = self.encoder_segment()
+            p, a = blocks.init_segment(key, cfg, enc_seg, name="encoder")
+            params["encoder"], axes["encoder"] = p, a
+            p, a = norm.init(cfg.d_model, jnp.dtype(cfg.param_dtype))
+            params["encoder_norm"], axes["encoder_norm"] = p, a
+        if cfg.num_vision_tokens:
+            k = fold_in_name(key, "vision_proj")
+            dtype = jnp.dtype(cfg.param_dtype)
+            params["vision_proj"] = {
+                "w1": jax.random.normal(k, (VISION_EMBED_DIM, cfg.d_model), dtype)
+                * VISION_EMBED_DIM**-0.5,
+                "w2": jax.random.normal(fold_in_name(k, "2"), (cfg.d_model, cfg.d_model), dtype)
+                * cfg.d_model**-0.5,
+            }
+            axes["vision_proj"] = {"w1": (None, "embed"), "w2": ("embed", "embed")}
+        return params, axes
+
+    def encoder_segment(self) -> SegmentSpec:
+        return SegmentSpec(body=(BlockSpec(mixer="attn", ffn="dense"),), repeat=self.cfg.encoder_layers)
+
+    # -- embedding helpers ----------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], batch["tokens"], cfg)
+        if cfg.num_vision_tokens and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            h = jnp.einsum("bpe,ed->bpd", ve, params["vision_proj"]["w1"].astype(x.dtype))
+            h = jax.nn.gelu(h)
+            h = jnp.einsum("bpd,de->bpe", h, params["vision_proj"]["w2"].astype(x.dtype))
+            nv = cfg.num_vision_tokens
+            x = jnp.concatenate([h[:, :nv, :], x[:, nv:, :]], axis=1)
+        return x
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        if not cfg.is_encoder_decoder:
+            return None
+        mem = batch["audio_embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        pos = jnp.arange(mem.shape[1])[None, :]
+        mem, _, _ = blocks.apply_segment(
+            params["encoder"], mem, cfg, self.encoder_segment(),
+            positions=pos, causal=False,
+        )
+        return norm.apply(params["encoder_norm"], mem, cfg.norm_eps)
+
+    # -- train forward --------------------------------------------------------
+    def forward(self, params, batch):
+        """batch: {tokens (B,S) int32, [audio_embeds], [vision_embeds]}.
+        Returns (logits (B,S,V) f32, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        memory = self._encode(params, batch)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        aux = jnp.zeros((), jnp.float32)
+        for i, seg in enumerate(cfg.segments):
+            x, _, a = blocks.apply_segment(
+                params[f"seg{i}"], x, cfg, seg, positions=positions, memory=memory
+            )
+            aux = aux + a
+        x = norm.apply(params["final_norm"], x, cfg.norm_eps)
+        return embedding.logits(params["embed"] if cfg.tie_embeddings else params["embed"], x, cfg), aux
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache = {}
+        for i, seg in enumerate(cfg.segments):
+            c = blocks.init_segment_cache(cfg, seg, batch, cache_len, dtype)
+            if c:
+                cache[f"seg{i}"] = c
+        return cache
+
+    def cache_axes(self):
+        cfg = self.cfg
+        axes = {}
+        for i, seg in enumerate(cfg.segments):
+            a = blocks.segment_cache_axes(seg)
+            if a:
+                axes[f"seg{i}"] = a
+        return axes
+
+    def prefill(self, params, batch, cache):
+        """Full-sequence forward filling the cache. Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        memory = self._encode(params, batch)
+        b, s = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        new_cache = {}
+        for i, seg in enumerate(cfg.segments):
+            x, c, _ = blocks.apply_segment(
+                params[f"seg{i}"], x, cfg, seg, positions=positions,
+                cache=cache.get(f"seg{i}"), memory=memory,
+            )
+            if c is not None:
+                new_cache[f"seg{i}"] = c
+        x = norm.apply(params["final_norm"], x, cfg.norm_eps)
+        logits = embedding.logits(params["embed"], x[:, -1:, :], cfg)
+        return logits, new_cache
+
+    def decode_step(self, params, token, cache, cache_index, memory=None):
+        """One-token decode. token: (B,1) int32; cache_index: scalar int32.
+        Returns (logits (B,1,V), new_cache)."""
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], token, cfg)
+        positions = jnp.full((token.shape[0], 1), cache_index, jnp.int32)
+        new_cache = {}
+        for i, seg in enumerate(cfg.segments):
+            x, c, _ = blocks.apply_segment(
+                params[f"seg{i}"], x, cfg, seg, positions=positions,
+                cache=cache.get(f"seg{i}"), cache_index=cache_index, memory=memory,
+            )
+            if c is not None:
+                new_cache[f"seg{i}"] = c
+        x = norm.apply(params["final_norm"], x, cfg.norm_eps)
+        return embedding.logits(params["embed"], x, cfg), new_cache

@@ -1,0 +1,95 @@
+"""ResNet-20-style CIFAR network in pure JAX (lax.conv) — the paper's own
+experimental model (Fig. 3 trains ResNet20 on CIFAR-10). Used by the Fig. 3
+reproduction at reduced width/resolution so CPU runs stay tractable, and at
+full shape for parity checks.
+
+Functional like the LM: ``params = init(key)``, ``logits = apply(params, x)``.
+No batch-norm state to thread: we use GroupNorm (batch-size independent —
+important here, since SEBS *changes the batch size* mid-training; BN's
+batch-statistics coupling would confound the comparison; noted in
+EXPERIMENTS.md)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.prng import fold_in_name
+
+
+@dataclass(frozen=True)
+class VisionConfig:
+    num_classes: int = 10
+    width: int = 16          # ResNet-20: 16/32/64
+    blocks_per_stage: int = 3  # ResNet-20: 3 stages × 3 blocks × 2 convs + 2
+    image_size: int = 32
+    channels: int = 3
+    groups: int = 4
+
+
+def _conv_init(key, cin, cout, k=3):
+    fan_in = cin * k * k
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _group_norm(x, scale, bias, groups):
+    n, h, w, c = x.shape
+    g = x.reshape(n, h, w, groups, c // groups)
+    mean = g.mean(axis=(1, 2, 4), keepdims=True)
+    var = g.var(axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + 1e-5)
+    return g.reshape(n, h, w, c) * scale + bias
+
+
+def init(key, cfg: VisionConfig = VisionConfig()):
+    params = {"stem": _conv_init(fold_in_name(key, "stem"), cfg.channels, cfg.width)}
+    widths = [cfg.width, 2 * cfg.width, 4 * cfg.width]
+    cin = cfg.width
+    for si, w in enumerate(widths):
+        for bi in range(cfg.blocks_per_stage):
+            name = f"s{si}b{bi}"
+            k = fold_in_name(key, name)
+            blk = {
+                "conv1": _conv_init(jax.random.fold_in(k, 1), cin, w),
+                "conv2": _conv_init(jax.random.fold_in(k, 2), w, w),
+                "gn1_scale": jnp.ones((w,)), "gn1_bias": jnp.zeros((w,)),
+                "gn2_scale": jnp.ones((w,)), "gn2_bias": jnp.zeros((w,)),
+            }
+            if cin != w:
+                blk["proj"] = _conv_init(jax.random.fold_in(k, 3), cin, w, k=1)
+            params[name] = blk
+            cin = w
+    params["head"] = {
+        "w": jax.random.normal(fold_in_name(key, "head"), (cin, cfg.num_classes)) * cin**-0.5,
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params
+
+
+def apply(params, x, cfg: VisionConfig = VisionConfig()):
+    """x: (N, H, W, C) float32 → logits (N, num_classes)."""
+    h = _conv(x, params["stem"])
+    widths = [cfg.width, 2 * cfg.width, 4 * cfg.width]
+    for si, w in enumerate(widths):
+        for bi in range(cfg.blocks_per_stage):
+            blk = params[f"s{si}b{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            y = _conv(h, blk["conv1"], stride)
+            y = jax.nn.relu(_group_norm(y, blk["gn1_scale"], blk["gn1_bias"], cfg.groups))
+            y = _conv(y, blk["conv2"])
+            y = _group_norm(y, blk["gn2_scale"], blk["gn2_bias"], cfg.groups)
+            skip = h
+            if "proj" in blk:
+                skip = _conv(h, blk["proj"], stride)
+            elif stride != 1:
+                skip = h[:, ::stride, ::stride, :]
+            h = jax.nn.relu(y + skip)
+    pooled = h.mean(axis=(1, 2))
+    return pooled @ params["head"]["w"] + params["head"]["b"]

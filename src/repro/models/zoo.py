@@ -1,0 +1,9 @@
+"""Model factory: config → LanguageModel."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LanguageModel
+
+
+def build_model(cfg: ModelConfig) -> LanguageModel:
+    return LanguageModel(cfg)

@@ -1,0 +1,39 @@
+"""Optimizer registry."""
+from __future__ import annotations
+
+from repro.optim.adagrad import adagrad, adagrad_da
+from repro.optim.adaptive import adamw, lamb, lars
+from repro.optim.base import Optimizer
+from repro.optim.sgd import momentum, psgd, sgd
+
+_REGISTRY = {
+    "sgd": sgd,
+    "psgd": psgd,
+    "momentum": momentum,
+    "msgd": momentum,
+    "adagrad": adagrad,
+    "adagrad_da": adagrad_da,
+    "adamw": adamw,
+    "lars": lars,
+    "lamb": lamb,
+}
+
+
+def make_optimizer(name: str, **hp) -> Optimizer:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**hp)
+
+
+__all__ = [
+    "Optimizer",
+    "make_optimizer",
+    "sgd",
+    "psgd",
+    "momentum",
+    "adagrad",
+    "adagrad_da",
+    "adamw",
+    "lars",
+    "lamb",
+]

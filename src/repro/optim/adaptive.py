@@ -1,0 +1,87 @@
+"""Baseline optimizers the paper compares against (or that large-batch
+literature uses): AdamW, LARS [You et al. 2017], LAMB."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params)
+        return {"stage": jnp.zeros((), jnp.int32), "m": z(), "v": z(), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1**c.astype(jnp.float32)
+        bc2 = 1 - b2**c.astype(jnp.float32)
+
+        def step(w, mm, vv):
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            wf = w.astype(jnp.float32)
+            return (wf - lr * (upd + weight_decay * wf)).astype(w.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        return new_params, {"stage": jnp.asarray(stage, jnp.int32), "m": m, "v": v, "count": c}
+
+    return Optimizer(init, update, "adamw")
+
+
+def _trust_ratio(w, g, weight_decay, eps=1e-9):
+    wn = jnp.linalg.norm(w.astype(jnp.float32).reshape(-1))
+    gn = jnp.linalg.norm(g.reshape(-1))
+    ratio = wn / (gn + weight_decay * wn + eps)
+    return jnp.where((wn > 0) & (gn > 0), ratio, 1.0)
+
+
+def lars(beta: float = 0.9, scaling: float = 0.01, weight_decay: float = 1e-4) -> Optimizer:
+    """Layer-wise Adaptive Rate Scaling [You et al. 2017] — the large-batch
+    baseline the paper compares mSEBS against (Fig. 3)."""
+
+    def init(params):
+        return {
+            "stage": jnp.zeros((), jnp.int32),
+            "u": jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params),
+        }
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        def per_leaf(w, g, u):
+            gf = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            local = scaling * _trust_ratio(w, gf, 0.0)
+            new_u = beta * u + local * lr * gf
+            return (w.astype(jnp.float32) - new_u).astype(w.dtype), new_u
+
+        outs = jax.tree.map(per_leaf, params, grads, state["u"])
+        istuple = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=istuple)
+        new_u = jax.tree.map(lambda o: o[1], outs, is_leaf=istuple)
+        return new_params, {"stage": jnp.asarray(stage, jnp.int32), "u": new_u}
+
+    return Optimizer(init, update, "lars")
+
+
+def lamb(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6, weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params)
+        return {"stage": jnp.zeros((), jnp.int32), "m": z(), "v": z(), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1**c.astype(jnp.float32)
+        bc2 = 1 - b2**c.astype(jnp.float32)
+
+        def step(w, mm, vv):
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps) + weight_decay * w.astype(jnp.float32)
+            ratio = _trust_ratio(w, upd, 0.0)
+            return (w.astype(jnp.float32) - lr * ratio * upd).astype(w.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        return new_params, {"stage": jnp.asarray(stage, jnp.int32), "m": m, "v": v, "count": c}
+
+    return Optimizer(init, update, "lamb")

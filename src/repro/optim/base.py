@@ -1,0 +1,50 @@
+"""Optimizer interface.
+
+Self-built (no optax): an :class:`Optimizer` is an (init, update) pair where
+
+    state  = opt.init(params)
+    params, state = opt.update(grads, state, params, lr=..., stage=...)
+
+``update`` returns the *new parameters* directly rather than additive
+updates, because the paper's pSGD proximal step and dual-averaging AdaGrad
+are not additive-update shaped.
+
+**Stages.** Every optimizer state carries ``stage`` (i32) and, for the
+SEBS-family optimizers, ``anchor`` — the stage-initialization parameters
+``w̃_s`` that the proximal term r(w) = ‖w−w̃ₛ‖²/2γ (pSGD) and the AdaGrad
+proximal matrix ψ are centred on. When the caller passes a ``stage`` value
+different from the stored one, the optimizer performs its stage-boundary
+transition *inside jit* (anchor ← params, momentum/accumulators reset per
+the paper) via ``jnp.where`` — so a single compiled train step serves all
+stages.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+    name: str = ""
+
+
+def stage_transition(new_stage, state_stage):
+    """Returns (is_new_stage: bool scalar, updated_stage)."""
+    new_stage = jnp.asarray(new_stage, jnp.int32)
+    fresh = new_stage != state_stage
+    return fresh, new_stage
+
+
+def where_tree(cond, a: PyTree, b: PyTree) -> PyTree:
+    """Elementwise tree select: cond ? a : b (cond is a scalar bool)."""
+    return jax.tree.map(lambda x, y: jnp.where(cond, x, y), a, b)
+
+
+def cast_like(tree: PyTree, ref: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, r: x.astype(r.dtype), tree, ref)

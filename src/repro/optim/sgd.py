@@ -1,0 +1,99 @@
+"""SGD-family optimizers: vanilla SGD, the paper's penalty SGD (pSGD,
+Algorithm 2), and Polyak momentum SGD with stage reset (mSGD, Algorithm 4).
+
+pSGD update (closed form of the Alg. 2 argmin):
+    w⁺ = argmin_w  gᵀw + ‖w−wₘ‖²/(2η) + ‖w−w̃‖²/(2γ)
+       = (γ·(wₘ − η·g) + η·w̃) / (γ + η)
+With γ=∞ this degenerates to vanilla SGD (property-tested).
+
+mSGD (Alg. 4):  u⁺ = β·u − η·g ;  w⁺ = w + u⁺ ; momentum u is reset to 0 at
+every stage boundary (the paper's convergence proofs require it; Table 1's
+mSGD* ablation shows it does not matter empirically — we support both).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, stage_transition, where_tree
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {"stage": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        new_params = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype), params, grads)
+        return new_params, {"stage": jnp.asarray(stage, jnp.int32)}
+
+    return Optimizer(init, update, "sgd")
+
+
+def psgd(gamma: float = 1e4, use_fused: bool = False) -> Optimizer:
+    """The paper's penalty SGD. ``gamma=float('inf')`` → vanilla SGD."""
+
+    def init(params):
+        return {
+            "stage": jnp.zeros((), jnp.int32),
+            "anchor": jax.tree.map(jnp.copy, params),
+        }
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        fresh, new_stage = stage_transition(stage, state["stage"])
+        anchor = where_tree(fresh, params, state["anchor"])
+
+        if math.isinf(gamma):
+            new_params = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype), params, grads)
+        elif use_fused:
+            from repro.kernels.fused_optim import ops as fused
+
+            new_params = jax.tree.map(
+                lambda w, g, a: fused.psgd_update(w, g, a, lr=lr, gamma=gamma),
+                params, grads, anchor,
+            )
+        else:
+            def step(w, g, a):
+                wf = w.astype(jnp.float32)
+                gf = g.astype(jnp.float32)
+                af = a.astype(jnp.float32)
+                out = (gamma * (wf - lr * gf) + lr * af) / (gamma + lr)
+                return out.astype(w.dtype)
+
+            new_params = jax.tree.map(step, params, grads, anchor)
+        return new_params, {"stage": new_stage, "anchor": anchor}
+
+    return Optimizer(init, update, "psgd")
+
+
+def momentum(beta: float = 0.9, reset_on_stage: bool = True, use_fused: bool = False) -> Optimizer:
+    """Polyak momentum SGD (paper Alg. 4)."""
+
+    def init(params):
+        return {
+            "stage": jnp.zeros((), jnp.int32),
+            "u": jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params),
+        }
+
+    def update(grads, state, params, *, lr, stage=0, **_):
+        fresh, new_stage = stage_transition(stage, state["stage"])
+        u = state["u"]
+        if reset_on_stage:
+            u = where_tree(fresh, jax.tree.map(jnp.zeros_like, u), u)
+
+        if use_fused:
+            from repro.kernels.fused_optim import ops as fused
+
+            outs = jax.tree.map(
+                lambda w, g, m: fused.momentum_update(w, g, m, lr=lr, beta=beta),
+                params, grads, u,
+            )
+            new_params = jax.tree.map(lambda o: o[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+            new_u = jax.tree.map(lambda o: o[1], outs, is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            new_u = jax.tree.map(lambda m, g: beta * m - lr * g.astype(jnp.float32), u, grads)
+            new_params = jax.tree.map(lambda w, m: (w.astype(jnp.float32) + m).astype(w.dtype), params, new_u)
+        return new_params, {"stage": new_stage, "u": new_u}
+
+    return Optimizer(init, update, "momentum")

@@ -1,0 +1,4 @@
+from repro.roofline.hlo import collective_stats
+from repro.roofline.analysis import RooflineTerms, roofline_from_summary, HW
+
+__all__ = ["collective_stats", "RooflineTerms", "roofline_from_summary", "HW"]

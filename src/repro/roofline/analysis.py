@@ -1,0 +1,103 @@
+"""Three-term roofline from dry-run artifacts.
+
+Terms (seconds, per executed step, whole job divided over chips):
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_wire_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (we charge per-device wire bytes against one link).
+
+HLO_FLOPs / HLO_bytes come from unrolled depth-1 / depth-2 companion
+compiles extrapolated linearly to the full depth (XLA counts while bodies
+once — measured, see DESIGN.md); the SSM sequence-scan recurrence is added
+analytically (it is a while loop over seq_len whose body XLA also counts
+once; its FLOPs are a documented few-percent correction).
+
+MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (inference forward)
+with N = active parameter count (MoE: top-k active experts).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# TPU v5e hardware constants
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "link_bw": 50e9,        # bytes/s per ICI link
+}
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute / max(term): 1.0 = perfectly compute-bound."""
+        m = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / m if m else 0.0
+
+
+def model_flops_for(kind: str, active_params: int, tokens: int) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference forward passes."""
+    per_token = 6 if kind == "train" else 2
+    return float(per_token * active_params * tokens)
+
+
+def roofline_from_summary(
+    summary: Dict,
+    *,
+    flops: Optional[float] = None,
+    hbm_bytes: Optional[float] = None,
+    collective_bytes: Optional[float] = None,
+) -> RooflineTerms:
+    """summary: a dryrun JSON dict. Optional overrides supply the
+    depth-extrapolated numbers (see repro.roofline.extrapolate)."""
+    chips = summary["devices"]
+    flops = flops if flops is not None else summary["cost"]["flops"]
+    hbm = hbm_bytes if hbm_bytes is not None else summary["cost"]["bytes_accessed"]
+    # HLO text shapes are per-device => collective bytes are per-device wire
+    coll = (
+        collective_bytes
+        if collective_bytes is not None
+        else summary["collectives"]["total_bytes"]
+    )
+    kind = summary.get("kind", "train")
+    tokens = summary["global_batch"] * (summary["seq_len"] if kind != "decode" else 1)
+    n_active = summary["param_counts"]["active"]
+    mf = model_flops_for(kind, n_active, tokens)
+
+    # cost_analysis runs on the PARTITIONED module: flops/bytes are
+    # per-device (measured: qwen train_4k r=1 per-device 1.16e13 ≈ analytic
+    # global 2.97e15 / 256). Collective bytes parsed from post-SPMD HLO are
+    # also per-device. MODEL_FLOPS is global → compare against flops×chips.
+    return RooflineTerms(
+        compute_s=flops / HW["peak_flops"],
+        memory_s=hbm / HW["hbm_bw"],
+        collective_s=coll / HW["link_bw"],
+        model_flops=mf,
+        hlo_flops=flops * chips,
+        useful_ratio=(mf / (flops * chips)) if flops else 0.0,
+    )

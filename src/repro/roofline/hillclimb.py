@@ -1,0 +1,138 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: measure roofline terms for config VARIANTS of a
+(arch × shape) pair — same depth-extrapolation methodology as the baseline
+sweep — so each hypothesis → change → measure cycle is one CLI call.
+
+  python -m repro.roofline.hillclimb --arch deepseek-67b --shape train_4k \
+      --variant tp_rs --accum 1
+
+Variants compose: "base", "tp_rs" (reduce-scatter TP boundaries),
+"save_out" (save_block_outputs remat), "tp_rs+save_out", and SEBS
+accumulation via --accum N (+ --accum-mode deferred).
+"""
+import argparse
+import json
+import time
+
+from repro.configs import INPUT_SHAPES
+from repro.configs.shapes import config_for
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import HW, roofline_from_summary
+from repro.roofline.extrapolate import extrapolate_costs, scaled_config, ssm_recurrence_flops
+from repro.utils.log import get_logger
+
+log = get_logger("hillclimb")
+
+
+def apply_variant(cfg, variant: str):
+    for part in variant.split("+"):
+        if part in ("base", ""):
+            continue
+        elif part == "tp_rs":
+            cfg = cfg.replace(tp_reduce_scatter=True)
+        elif part == "save_out":
+            cfg = cfg.replace(remat_policy="save_block_outputs")
+        elif part == "dots_nb":
+            cfg = cfg.replace(remat_policy="dots_no_batch")
+        elif part == "bf16_params":
+            cfg = cfg.replace(param_dtype="bfloat16")
+        else:
+            raise ValueError(f"unknown variant component {part!r}")
+    return cfg
+
+
+def measure(arch: str, shape_name: str, variant: str = "base", *, accum: int = 1,
+            accum_mode: str = "psum_each", with_memory: bool = False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = apply_variant(config_for(arch, shape_name), variant)
+    mesh = make_production_mesh(multi_pod=False)
+    full_repeat = cfg.segments[0].repeat
+
+    kw = {}
+    if shape.kind == "train":
+        kw = {"accum_steps": accum, "accum_mode": accum_mode}
+    summaries = {}
+    for r in (1, 2):
+        _, compiled = dr.lower_combo(scaled_config(cfg, r), shape, mesh, **kw)
+        summaries[r] = dr.summarize(None, compiled, mesh)
+    costs = extrapolate_costs(
+        summaries[1], summaries[2], full_repeat, ssm_recurrence_flops(cfg, shape)
+    )
+    # reuse the baseline production summary's metadata (params, tokens)
+    meta = {
+        "devices": 256,
+        "kind": shape.kind,
+        "global_batch": shape.global_batch,
+        "seq_len": shape.seq_len,
+        "param_counts": cfg.param_counts(),
+        "collectives": summaries[1]["collectives"],
+        "cost": summaries[1]["cost"],
+    }
+    terms = roofline_from_summary(
+        meta,
+        flops=costs["flops"],
+        hbm_bytes=costs["bytes_accessed"],
+        collective_bytes=costs["collective_bytes"],
+    )
+    out = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "accum": accum, "accum_mode": accum_mode,
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "useful_ratio": terms.useful_ratio,
+        "per_layer_coll_bytes": costs["per_layer"]["collective_bytes"],
+        "coll_by_type_r2": summaries[2]["collectives"]["by_type_bytes"],
+    }
+    if accum > 1:
+        # with accumulation the microbatch loop is a while body: collectives
+        # inside execute `accum` times per update, those outside once. The
+        # per-update totals need that split (XLA counts bodies once).
+        c1, c2 = summaries[1]["collectives"], summaries[2]["collectives"]
+        per_update = {
+            r: c["in_while_bytes"] * accum + (c["total_bytes"] - c["in_while_bytes"])
+            for r, c in ((1, c1), (2, c2))
+        }
+        full_r = cfg.segments[0].repeat
+        out["coll_bytes_per_update"] = per_update[1] + (full_r - 1) * (
+            per_update[2] - per_update[1]
+        )
+        out["coll_bytes_per_sample"] = out["coll_bytes_per_update"] / shape.global_batch
+        out["in_while_fraction_r2"] = c2["in_while_bytes"] / max(c2["total_bytes"], 1)
+    if with_memory:
+        _, compiled = dr.lower_combo(cfg, shape, mesh, **kw)
+        s = dr.summarize(None, compiled, mesh)
+        out["peak_gb_per_device"] = s["memory"]["peak_bytes_per_device"] / 2**30
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--accum-mode", default="psum_each")
+    ap.add_argument("--with-memory", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/hillclimb")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    res = measure(args.arch, args.shape, args.variant, accum=args.accum,
+                  accum_mode=args.accum_mode, with_memory=args.with_memory)
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}_{args.shape}_{args.variant.replace('+','-')}_a{args.accum}{args.accum_mode[0]}"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    log.info(
+        "%s: compute=%.3fs memory=%.3fs coll=%.3fs dominant=%s useful=%.2f (%.0fs)%s",
+        tag, res["compute_s"], res["memory_s"], res["collective_s"],
+        res["dominant"], res["useful_ratio"], time.time() - t0,
+        f" peak={res['peak_gb_per_device']:.1f}GB" if args.with_memory else "",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled module: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instruction contributes its shape bytes.
+Shapes in post-partitioning HLO are per-device. Wire-byte conventions:
+
+- all-reduce: 2 × shape (reduce-scatter + all-gather phases of a ring)
+- all-gather: output shape (each device receives the gathered result)
+- reduce-scatter / all-to-all / collective-permute: shape
+
+Instructions inside ``while`` bodies execute trip-count times but appear
+once in the text. We therefore build the computation call graph (fusions
+``calls=``, while ``body=``/``condition=``, reducers ``to_apply=``) and
+classify every collective as inside or outside a while body — the roofline
+pipeline feeds unrolled compiles (no layer loop) and multiplies the
+``in_while`` share by the known trip count (microbatch accumulation).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Set
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_COLL_RE = re.compile(r"\b(" + "|".join(_COLL_OPS) + r")(?:-start)?\(")
+_RESULT_RE = re.compile(r"=\s*(.*?)\s+(?:" + "|".join(_COLL_OPS) + r")")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_DEF_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=%?([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = _COMP_DEF_RE.match(line)
+        if m:
+            current = m.group(2)
+            comps[current] = []
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    comps = _split_computations(hlo_text)
+
+    # call graph + while-body roots
+    edges: Dict[str, Set[str]] = defaultdict(set)
+    while_bodies: Set[str] = set()
+    for name, lines in comps.items():
+        for line in lines:
+            for callee in _CALL_RE.findall(line):
+                edges[name].add(callee)
+            wb = _WHILE_BODY_RE.search(line)
+            if wb:
+                while_bodies.add(wb.group(1))
+
+    # computations transitively reachable from any while body
+    in_while: Set[str] = set()
+    stack = list(while_bodies)
+    while stack:
+        n = stack.pop()
+        if n in in_while:
+            continue
+        in_while.add(n)
+        stack.extend(edges.get(n, ()))
+
+    by_type_bytes: Dict[str, int] = defaultdict(int)
+    by_type_count: Dict[str, int] = defaultdict(int)
+    in_while_bytes = 0
+    for name, lines in comps.items():
+        inside = name in in_while
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done" in line.split("=")[-1][:40]:
+                continue
+            op = m.group(1)
+            rm = _RESULT_RE.search(line)
+            result_bytes = _shape_bytes(rm.group(1)) if rm else 0
+            wire = 2 * result_bytes if op == "all-reduce" else result_bytes
+            by_type_bytes[op] += wire
+            by_type_count[op] += 1
+            if inside:
+                in_while_bytes += wire
+
+    return {
+        "total_bytes": int(sum(by_type_bytes.values())),
+        "in_while_bytes": int(in_while_bytes),
+        "by_type_bytes": dict(by_type_bytes),
+        "by_type_count": dict(by_type_count),
+    }

@@ -1,0 +1,112 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline sweep: for every applicable (arch × shape) on the single-pod
+production mesh, compile the unrolled r=1 / r=2 companions, extrapolate to
+full depth, combine with the production dry-run summary, and emit the
+three-term roofline JSON.
+
+  python -m repro.roofline.run --out benchmarks/results/roofline
+"""
+import argparse
+import json
+import time
+import traceback
+
+from repro.configs import INPUT_SHAPES, list_archs
+from repro.configs.shapes import config_for, shape_applicable
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import HW, model_flops_for, roofline_from_summary
+from repro.roofline.extrapolate import extrapolate_costs, scaled_config, ssm_recurrence_flops
+from repro.utils.log import get_logger
+
+log = get_logger("roofline")
+
+
+def roofline_combo(arch: str, shape_name: str, dryrun_dir: str) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for(arch, shape_name)
+    mesh = make_production_mesh(multi_pod=False)
+    full_repeat = cfg.segments[0].repeat
+
+    summaries = {}
+    for r in (1, 2):
+        _, compiled = dr.lower_combo(scaled_config(cfg, r), shape, mesh)
+        summaries[r] = dr.summarize(None, compiled, mesh)
+
+    ssm_fix = ssm_recurrence_flops(cfg, shape)
+    costs = extrapolate_costs(summaries[1], summaries[2], full_repeat, ssm_fix)
+
+    # production dry-run summary for memory + metadata
+    tag = f"{arch}_{shape_name}_pod1"
+    prod_path = os.path.join(dryrun_dir, tag + ".json")
+    with open(prod_path) as f:
+        prod = json.load(f)
+
+    terms = roofline_from_summary(
+        prod,
+        flops=costs["flops"],
+        hbm_bytes=costs["bytes_accessed"],
+        collective_bytes=costs["collective_bytes"],
+    )
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "config": cfg.name,
+        "devices": prod["devices"],
+        "extrapolated": costs,
+        "memory_per_device": prod["memory"],
+        "terms": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "step_time_bound_s": terms.step_time_s,
+            "roofline_fraction": terms.roofline_fraction,
+        },
+        "model_flops": terms.model_flops,
+        "hlo_flops": terms.hlo_flops,
+        "useful_ratio": terms.useful_ratio,
+        "hw": HW,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--dryrun-dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--out", default="benchmarks/results/roofline")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not shape_applicable(arch, shape):
+                continue
+            t0 = time.time()
+            try:
+                res = roofline_combo(arch, shape, args.dryrun_dir)
+                with open(os.path.join(args.out, f"{arch}_{shape}.json"), "w") as f:
+                    json.dump(res, f, indent=1)
+                t = res["terms"]
+                log.info(
+                    "%-30s dominant=%-10s compute=%.4fs memory=%.4fs coll=%.4fs useful=%.2f (%.0fs)",
+                    f"{arch}×{shape}", t["dominant"], t["compute_s"], t["memory_s"],
+                    t["collective_s"], res["useful_ratio"], time.time() - t0,
+                )
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                log.error("FAIL %s×%s: %s", arch, shape, e)
+                traceback.print_exc(limit=6)
+    if failures:
+        raise SystemExit(f"{len(failures)} roofline failures")
+
+
+if __name__ == "__main__":
+    main()

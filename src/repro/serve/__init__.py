@@ -1,0 +1,4 @@
+from repro.serve.step import build_decode_step, build_prefill_step
+from repro.serve.engine import ServeEngine
+
+__all__ = ["build_decode_step", "build_prefill_step", "ServeEngine"]

@@ -1,0 +1,46 @@
+"""Minimal batched serving engine: prefill a batch of prompts, then decode
+greedily token-by-token (used by examples/serve_demo.py and the serving
+integration tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LanguageModel
+from repro.serve.step import build_decode_step, build_prefill_step
+
+
+class ServeEngine:
+    def __init__(self, model: LanguageModel, params, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self._prefill = build_prefill_step(model, donate=False)
+        self._decode = build_decode_step(model, donate=False)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16, memory=None) -> np.ndarray:
+        """prompts: (B, P) int32. Greedy decode. Returns (B, P+new)."""
+        b, p = prompts.shape
+        assert p + max_new_tokens <= self.cache_len
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.model.cfg.is_encoder_decoder and memory is None:
+            raise ValueError("encoder-decoder model requires audio memory")
+        cache = self.model.init_cache(b, self.cache_len)
+        if self.model.cfg.is_encoder_decoder:
+            batch["audio_embeds"] = memory
+            memory = self.model._encode(self.params, batch)
+        logits, cache = self._prefill(self.params, batch, cache)
+        out = [jnp.asarray(prompts, jnp.int32)]
+        token = jnp.argmax(logits[:, -1, : self.model.cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        for i in range(max_new_tokens):
+            out.append(token)
+            if i == max_new_tokens - 1:
+                break
+            logits, cache = self._decode(
+                self.params, token, cache, jnp.int32(p + i), memory=memory
+            )
+            token = jnp.argmax(logits[:, -1, : self.model.cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
+        return np.asarray(jnp.concatenate(out, axis=1))

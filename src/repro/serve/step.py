@@ -1,0 +1,35 @@
+"""Serving steps.
+
+``decode_step`` — one new token per request against a KV/state cache of
+``cache_len`` (this is what the decode_32k / long_500k dry-run shapes
+lower). The attention KV caches carry a ``kv_seq → data`` sharding so the
+524 288-token cache of the long-context shape is distributed over the data
+axis (sequence/context parallelism at decode); SSM states are O(1) and
+shard over heads.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models.lm import LanguageModel
+
+
+def build_prefill_step(model: LanguageModel, *, donate: bool = True):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(prefill, **kwargs)
+
+
+def build_decode_step(model: LanguageModel, *, donate: bool = True):
+    def decode(params, token, cache, cache_index, memory=None):
+        logits, new_cache = model.decode_step(params, token, cache, cache_index, memory=memory)
+        return logits, new_cache
+
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(decode, **kwargs)

@@ -1,0 +1,17 @@
+from repro.sharding.partitioning import (
+    LOGICAL_RULES,
+    logical_to_mesh_spec,
+    named_sharding,
+    shard_tree,
+    constrain,
+    batch_spec,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_to_mesh_spec",
+    "named_sharding",
+    "shard_tree",
+    "constrain",
+    "batch_spec",
+]

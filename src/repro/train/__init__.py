@@ -1,0 +1,5 @@
+from repro.train.loss import lm_loss
+from repro.train.state import TrainState, init_train_state
+from repro.train.step import build_train_step, build_eval_step
+
+__all__ = ["lm_loss", "TrainState", "init_train_state", "build_train_step", "build_eval_step"]

@@ -1,0 +1,49 @@
+"""Train state: params + optimizer state + step counter, with the logical
+sharding tree riding along (optimizer-state slots that mirror the params —
+momentum, AdaGrad accumulators, the pSGD anchor — inherit each parameter's
+sharding: ZeRO-1-style placement with no extra rules)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array  # i32 scalar
+
+
+def is_axes_leaf(x) -> bool:
+    """Logical-axes trees use tuples of axis names as leaves."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def init_train_state(model, optimizer, key) -> tuple[TrainState, Any]:
+    """Returns (state, param_logical_axes)."""
+    params, axes = model.init(key)
+    opt_state = optimizer.init(params)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32)), axes
+
+
+def opt_state_axes(opt_state, params, param_axes):
+    """Logical-axes tree matching ``opt_state``: param-shaped slots copy the
+    param axes, everything else (stage counters etc.) is replicated."""
+    params_structure = jax.tree.structure(params)
+    out = {}
+    for k, v in opt_state.items():
+        if jax.tree.structure(v) == params_structure:
+            out[k] = param_axes
+        else:
+            out[k] = jax.tree.map(lambda _: (), v)
+    return out
+
+
+def state_axes(state: TrainState, param_axes):
+    return TrainState(
+        params=param_axes,
+        opt_state=opt_state_axes(state.opt_state, state.params, param_axes),
+        step=(),
+    )

@@ -1,0 +1,28 @@
+from repro.utils.tree import (
+    tree_stack,
+    tree_unstack,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_norm,
+    tree_size,
+    tree_bytes,
+    tree_paths,
+)
+from repro.utils.prng import key_iter, fold_in_name
+from repro.utils.log import get_logger
+
+__all__ = [
+    "tree_stack",
+    "tree_unstack",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_norm",
+    "tree_size",
+    "tree_bytes",
+    "tree_paths",
+    "key_iter",
+    "fold_in_name",
+    "get_logger",
+]

@@ -1,0 +1,26 @@
+"""PRNG helpers: deterministic named key derivation.
+
+All parameter initialization in the framework derives keys by *name* rather
+than by split order, so adding a layer never reshuffles the initialization
+of unrelated layers (important for reproducible A/B perf experiments).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterator
+
+import jax
+
+
+def fold_in_name(key: jax.Array, name: str) -> jax.Array:
+    """Derive a subkey deterministically from a string name."""
+    digest = hashlib.sha256(name.encode("utf-8")).digest()
+    salt = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, salt)
+
+
+def key_iter(key: jax.Array) -> Iterator[jax.Array]:
+    """Infinite iterator of fresh subkeys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,83 @@
+"""Pytree utilities used across the framework.
+
+These are deliberately small and dependency-free (pure jax): the framework
+does not use flax/optax, so parameter containers are plain nested dicts and
+these helpers provide the handful of structural operations we need
+(stacking per-layer params for scan-over-layers, norms for grad clipping,
+byte accounting for the roofline/memory reports).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_stack(trees: Sequence[PyTree]) -> PyTree:
+    """Stack a list of identically-structured trees along a new leading axis.
+
+    Used to convert ``[layer_0_params, layer_1_params, ...]`` into the
+    stacked representation consumed by ``lax.scan`` over layers.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    """Inverse of :func:`tree_stack`."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: PyTree, scale) -> PyTree:
+    return jax.tree.map(lambda x: x * scale, tree)
+
+
+def tree_norm(tree: PyTree) -> jax.Array:
+    """Global L2 norm over every leaf."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of elements across leaves."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(
+        sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(tree))
+    )
+
+
+def tree_paths(tree: PyTree) -> list[str]:
+    """Flattened '/'-joined key paths, stable order; used by checkpointing."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [_path_str(path) for path, _ in flat]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """Map ``fn(path_str, leaf)`` over a tree; used for per-param rules."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)

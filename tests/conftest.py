@@ -1,0 +1,16 @@
+"""Test fixtures. NOTE: no XLA_FLAGS device-count override here by design —
+smoke tests and benches see 1 CPU device; only launch/dryrun.py configures
+the 512 placeholder devices (and tests needing a small multi-device mesh
+spawn a subprocess)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

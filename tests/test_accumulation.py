@@ -1,0 +1,88 @@
+"""Gradient-accumulation equivalence — the execution-mode invariants behind
+SEBS's `accumulate` batch-growth mode."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+from repro.train.step import build_train_step
+
+
+def _setup():
+    # f32 compute so the K-microbatch mean and the big-batch mean agree to
+    # float rounding (bf16 would round differently per microbatch)
+    cfg = get_config("qwen2.5-3b", "smoke").replace(compute_dtype="float32")
+    model = build_model(cfg)
+    optimizer = make_optimizer("sgd")
+    params, _ = model.init(jax.random.key(0))
+    state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+    return cfg, model, optimizer, state
+
+
+def test_accumulated_equals_big_batch():
+    """K microbatches accumulated == one K·b batch (same mean gradient)."""
+    cfg, model, optimizer, state = _setup()
+    tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+    big = {"tokens": tokens}
+    stacked = {"tokens": tokens.reshape(4, 2, 16)}
+
+    step1 = build_train_step(model, optimizer, mesh=None, accum_steps=1, donate=False)
+    stepk = build_train_step(model, optimizer, mesh=None, accum_steps=4, donate=False)
+    s1, m1 = step1(state, big, jnp.float32(0.1), jnp.int32(0))
+    sk, mk = stepk(state, stacked, jnp.float32(0.1), jnp.int32(0))
+    assert float(m1["loss"]) == pytest.approx(float(mk["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(sk.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6)
+
+
+_DEFERRED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    from repro.train.state import TrainState
+    from repro.train.step import build_train_step
+
+    cfg = get_config("qwen2.5-3b", "smoke").replace(compute_dtype="float32")
+    model = build_model(cfg)
+    opt = make_optimizer("sgd")
+    params, _ = model.init(jax.random.key(0))
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    mesh = jax.make_mesh((4, 1), ("data", "model"))
+    tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
+    stacked = {"tokens": tokens.reshape(2, 4, 16)}
+
+    with jax.set_mesh(mesh):
+        step_d = build_train_step(model, opt, mesh, accum_steps=2, mode="deferred", donate=False)
+        sd, md = step_d(state, stacked, jnp.float32(0.1), jnp.int32(0))
+    step_p = build_train_step(model, opt, mesh=None, accum_steps=2, donate=False)
+    sp, mp = step_p(state, stacked, jnp.float32(0.1), jnp.int32(0))
+
+    assert abs(float(md["loss"]) - float(mp["loss"])) < 1e-3, (md["loss"], mp["loss"])
+    for a, b in zip(jax.tree.leaves(sd.params), jax.tree.leaves(sp.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=1e-4)
+    print("DEFERRED_OK")
+    """
+)
+
+
+def test_deferred_psum_equals_pjit_on_fake_devices():
+    """shard_map deferred-all-reduce mode reproduces plain pjit results
+    (run in a subprocess with 4 host devices so this session keeps 1)."""
+    res = subprocess.run(
+        [sys.executable, "-c", _DEFERRED_SCRIPT], capture_output=True, text=True, cwd="."
+    )
+    assert "DEFERRED_OK" in res.stdout, res.stdout + res.stderr

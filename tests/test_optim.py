@@ -1,0 +1,159 @@
+"""Optimizer library: closed forms, stage transitions, paper algorithms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adagrad_da, adamw, lamb, lars, make_optimizer, momentum, psgd, sgd
+
+
+def _params():
+    return {
+        "a": jnp.asarray(np.random.default_rng(0).standard_normal((5, 3)), jnp.float32),
+        "b": {"c": jnp.asarray(np.random.default_rng(1).standard_normal(7), jnp.float32)},
+    }
+
+
+def _grads():
+    return {
+        "a": jnp.asarray(np.random.default_rng(2).standard_normal((5, 3)), jnp.float32),
+        "b": {"c": jnp.asarray(np.random.default_rng(3).standard_normal(7), jnp.float32)},
+    }
+
+
+def test_psgd_is_argmin_of_proximal_objective():
+    """w⁺ = argmin gᵀw + ‖w−wₘ‖²/2η + ‖w−w̃‖²/2γ  (Alg. 2 update)."""
+    lr, gamma = 0.1, 5.0
+    opt = psgd(gamma=gamma)
+    params, grads = _params(), _grads()
+    state = opt.init(params)
+    new_params, _ = opt.update(grads, state, params, lr=lr, stage=0)
+
+    def objective(w, g, wm, anchor):
+        return (
+            jnp.vdot(g, w)
+            + jnp.sum((w - wm) ** 2) / (2 * lr)
+            + jnp.sum((w - anchor) ** 2) / (2 * gamma)
+        )
+
+    for k_new, k_old, g in [
+        (new_params["a"], params["a"], grads["a"]),
+        (new_params["b"]["c"], params["b"]["c"], grads["b"]["c"]),
+    ]:
+        grad_at_min = jax.grad(objective)(k_new, g, k_old, k_old)  # anchor = init params
+        np.testing.assert_allclose(np.asarray(grad_at_min), 0.0, atol=1e-5)
+
+
+@given(lr=st.floats(1e-4, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_psgd_gamma_inf_equals_sgd(lr):
+    params, grads = _params(), _grads()
+    p_inf = psgd(gamma=float("inf"))
+    p_sgd = sgd()
+    out1, _ = p_inf.update(grads, p_inf.init(params), params, lr=lr, stage=0)
+    out2, _ = p_sgd.update(grads, p_sgd.init(params), params, lr=lr, stage=0)
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_psgd_anchor_refresh_on_stage_change():
+    opt = psgd(gamma=2.0)
+    params, grads = _params(), _grads()
+    state = opt.init(params)
+    p1, state = opt.update(grads, state, params, lr=0.1, stage=0)
+    # same stage: anchor unchanged (== original params)
+    np.testing.assert_allclose(np.asarray(state["anchor"]["a"]), np.asarray(params["a"]))
+    p2, state = opt.update(grads, state, p1, lr=0.1, stage=1)
+    # new stage: anchor refreshed to the stage-entry params p1
+    np.testing.assert_allclose(np.asarray(state["anchor"]["a"]), np.asarray(p1["a"]))
+
+
+def test_momentum_matches_paper_recursion_and_resets():
+    """Alg. 4: u⁺ = βu − ηg; w⁺ = w + u⁺; u reset at stage boundary."""
+    beta, lr = 0.9, 0.05
+    opt = momentum(beta=beta, reset_on_stage=True)
+    params, grads = _params(), _grads()
+    state = opt.init(params)
+    w, st_ = params, state
+    u_manual = jnp.zeros_like(params["a"])
+    w_manual = params["a"]
+    for step in range(3):
+        w, st_ = opt.update(grads, st_, w, lr=lr, stage=0)
+        u_manual = beta * u_manual - lr * grads["a"]
+        w_manual = w_manual + u_manual
+    np.testing.assert_allclose(np.asarray(w["a"]), np.asarray(w_manual), rtol=1e-5)
+    # stage boundary resets momentum: update equals plain SGD step
+    w2, st2 = opt.update(grads, st_, w, lr=lr, stage=1)
+    np.testing.assert_allclose(
+        np.asarray(w2["a"]), np.asarray(w["a"] - lr * grads["a"]), rtol=1e-5
+    )
+
+
+def test_adagrad_da_matches_algorithm6_loop():
+    """wₘ₊₁ = w̃ − η·(Σgᵢ)/(δ²+Σgᵢ²)^ν — run 4 steps, compare manual."""
+    delta, nu, lr = 1.5, 1.0, 0.3
+    opt = adagrad_da(delta=delta, nu=nu)
+    params = _params()
+    state = opt.init(params)
+    rng = np.random.default_rng(9)
+    w = params
+    z = np.zeros_like(params["a"])
+    s2 = np.zeros_like(params["a"])
+    anchor = np.asarray(params["a"])
+    for m in range(4):
+        g = {"a": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32),
+             "b": {"c": jnp.asarray(rng.standard_normal(7), jnp.float32)}}
+        w, state = opt.update(g, state, w, lr=lr, stage=0)
+        z += np.asarray(g["a"])
+        s2 += np.asarray(g["a"]) ** 2
+        manual = anchor - lr * z / (delta**2 + s2) ** nu
+        np.testing.assert_allclose(np.asarray(w["a"]), manual, rtol=1e-5)
+
+
+def test_adagrad_da_stage_reset_recentres_anchor():
+    opt = adagrad_da(delta=1.0, nu=1.0)
+    params, grads = _params(), _grads()
+    state = opt.init(params)
+    w, state = opt.update(grads, state, params, lr=0.1, stage=0)
+    w2, state = opt.update(grads, state, w, lr=0.1, stage=1)
+    # fresh stage: z reset then one step → w2 = w − lr·g/(δ²+g²)
+    manual = np.asarray(w["a"]) - 0.1 * np.asarray(grads["a"]) / (
+        1.0 + np.asarray(grads["a"]) ** 2
+    )
+    np.testing.assert_allclose(np.asarray(w2["a"]), manual, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name,lr,steps", [
+    ("adamw", 0.05, 300),
+    ("lars", 1.0, 300),      # trust-ratio scaling 0.01 → effective lr 0.01·‖w‖/‖g‖
+    ("lamb", 0.05, 300),
+    ("adagrad", 2.0, 500),   # accumulated denominator needs a larger base lr
+])
+def test_baseline_optimizers_descend_quadratic(name, lr, steps):
+    opt = make_optimizer(name)
+    w = {"w": jnp.full((4,), 5.0)}
+    state = opt.init(w)
+    loss = lambda p: 0.5 * jnp.sum(p["w"] ** 2)
+    l0 = float(loss(w))
+    for _ in range(steps):
+        g = jax.grad(loss)(w)
+        w, state = opt.update(g, state, w, lr=lr, stage=0)
+    assert float(loss(w)) < 0.1 * l0
+
+
+def test_fused_kernel_path_matches_jnp_path():
+    params, grads = _params(), _grads()
+    for make_a, make_b in [
+        (lambda: psgd(gamma=7.0), lambda: psgd(gamma=7.0, use_fused=True)),
+        (lambda: momentum(beta=0.9), lambda: momentum(beta=0.9, use_fused=True)),
+        (lambda: adagrad_da(delta=1.0), lambda: adagrad_da(delta=1.0, use_fused=True)),
+    ]:
+        oa, ob = make_a(), make_b()
+        sa, sb = oa.init(params), ob.init(params)
+        wa, wb = params, params
+        for step in range(3):
+            wa, sa = oa.update(grads, sa, wa, lr=0.1, stage=0)
+            wb, sb = ob.update(grads, sb, wb, lr=0.1, stage=0)
+        for x, y in zip(jax.tree.leaves(wa), jax.tree.leaves(wb)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6)

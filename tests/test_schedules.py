@@ -1,0 +1,123 @@
+"""Schedule invariants (paper §3.3), property-based where it matters."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedules import SEBS, ClassicalStagewise, DBSGD, EpochStagewise
+from repro.core.stages import StageController
+
+
+@given(
+    b1=st.integers(1, 64),
+    c1=st.integers(100, 10_000),
+    rho=st.floats(1.5, 8.0),
+    stages=st.integers(1, 6),
+)
+@settings(max_examples=50, deadline=None)
+def test_sebs_geometric_batch_growth(b1, c1, rho, stages):
+    s = SEBS(b1=b1, C1=c1, rho=rho, num_stages=stages, eta=0.1)
+    prev_end = 0
+    for i in range(stages):
+        info = s.info(prev_end)
+        assert info.stage == i
+        assert info.batch_size == int(round(b1 * rho**i))
+        assert info.lr == 0.1  # constant LR — that's the whole point
+        prev_end = info.samples_end
+
+
+@given(
+    b1=st.integers(8, 64),
+    c1=st.integers(100, 10_000),
+    rho=st.floats(1.5, 8.0),
+    stages=st.integers(1, 6),
+    eta=st.floats(0.01, 1.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_equivalence_invariant_eta_over_b(b1, c1, rho, stages, eta):
+    """Paper equivalence: strategy (a) classical (lr/ρ) and (b) SEBS (b·ρ)
+    keep the SAME ηₛ/bₛ ratio trajectory (∝ εₛ) at the same compute —
+    up to integer rounding of the SEBS batch size."""
+    sebs = SEBS(b1=b1, C1=c1, rho=rho, num_stages=stages, eta=eta)
+    classical = ClassicalStagewise(b=b1, C1=c1, rho=rho, num_stages=stages, eta1=eta)
+    assert sebs.total_samples == classical.total_samples
+    for s in range(stages):
+        samples = sebs.boundaries[s] - 1
+        i_sebs = sebs.info(samples)
+        i_cls = classical.info(samples)
+        exact_batch = b1 * rho**s
+        rounding = abs(i_sebs.batch_size - exact_batch) / exact_batch
+        ratio_sebs = i_sebs.lr / i_sebs.batch_size
+        ratio_cls = i_cls.lr / i_cls.batch_size
+        assert ratio_sebs == pytest.approx(ratio_cls, rel=1.1 * rounding + 1e-9)
+
+
+@given(
+    b1=st.integers(1, 32),
+    c1=st.integers(512, 5_000),
+    rho=st.integers(2, 8),
+    stages=st.integers(2, 5),
+)
+@settings(max_examples=30, deadline=None)
+def test_sebs_reduces_updates_vs_classical(b1, c1, rho, stages):
+    """The headline: at equal computation complexity SEBS needs fewer
+    parameter updates (iteration complexity ~ S·M vs geometric sum)."""
+    sebs = SEBS(b1=b1, C1=c1, rho=float(rho), num_stages=stages, eta=0.1)
+    classical = ClassicalStagewise(b=b1, C1=c1, rho=float(rho), num_stages=stages, eta1=0.1)
+    u_sebs = sum(sebs.updates_per_stage())
+    u_cls = sum(classical.updates_per_stage())
+    assert u_sebs <= u_cls
+    if stages >= 3:
+        assert u_sebs < u_cls  # strictly fewer once batches actually grow
+
+
+def test_sebs_updates_per_stage_constant():
+    """Mₛ = Cₛ/bₛ = C₁/b₁ for every stage (paper: iteration complexity
+    O(log 1/ε) — one constant block of updates per stage)."""
+    s = SEBS(b1=16, C1=1600, rho=4.0, num_stages=4, eta=0.1)
+    ups = s.updates_per_stage()
+    assert all(u == ups[0] for u in ups)
+
+
+def test_controller_accumulate_mode_shapes():
+    s = SEBS(b1=8, C1=64, rho=2.0, num_stages=3, eta=0.1)
+    ctl = StageController(s, microbatch=8, mode="accumulate")
+    plans = list(ctl.plans())
+    # stage s: accum = 2^s
+    accums = sorted({p.accum_steps for p in plans})
+    assert accums == [1, 2, 4]
+    assert all(p.microbatch == 8 for p in plans)
+    # one compiled shape per stage
+    assert len(ctl.distinct_shapes()) == 3
+    # compute budget conserved
+    assert plans[-1].samples_after >= s.total_samples
+
+
+def test_controller_reshape_mode():
+    s = SEBS(b1=8, C1=64, rho=2.0, num_stages=2, eta=0.1)
+    ctl = StageController(s, mode="reshape")
+    plans = list(ctl.plans())
+    assert {p.batch_size for p in plans} == {8, 16}
+    assert all(p.accum_steps == 1 for p in plans)
+
+
+def test_dbsgd_grows_every_epoch():
+    d = DBSGD(b1=100, eta=0.1, epoch_size=1000, total_epochs=5, scale=1.02)
+    assert d.info(0).batch_size == 100
+    assert d.info(1000).batch_size == 102
+    assert d.info(4000).batch_size == int(round(100 * 1.02**4))
+
+
+def test_epoch_stagewise_matches_paper_cifar_setup():
+    """He et al.: LR/10 at epochs 80,120; SEBS: b×ρ at the same epochs."""
+    n = 50_000
+    cls = EpochStagewise(b1=128, eta1=0.5, rho=10, epoch_size=n,
+                         boundaries_epochs=(80, 120), total_epochs=160, mode="classical")
+    sebs = EpochStagewise(b1=128, eta1=0.5, rho=4, epoch_size=n,
+                          boundaries_epochs=(80, 120), total_epochs=160, mode="sebs")
+    assert cls.info(79 * n).lr == 0.5
+    assert cls.info(81 * n).lr == pytest.approx(0.05)
+    assert cls.info(121 * n).lr == pytest.approx(0.005)
+    assert sebs.info(81 * n).batch_size == 512
+    assert sebs.info(121 * n).batch_size == 2048
+    assert sebs.info(121 * n).lr == 0.5

@@ -1,0 +1,86 @@
+"""Sharding rule solver: divisibility fallback, no double axis use."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import logical_to_mesh_spec, batch_spec
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+
+    # clean divide: heads shard
+    spec = logical_to_mesh_spec(("batch", "seq", "heads", "head_dim"), mesh, (8, 128, 8, 64))
+    assert spec == P("data", None, "model", None), spec
+
+    # heads don't divide: head_dim fallback takes model
+    spec = logical_to_mesh_spec(("batch", "seq", "kv_heads", "head_dim"), mesh, (8, 128, 2, 64))
+    assert spec == P("data", None, None, "model"), spec
+
+    # weights: embed->data (FSDP), mlp->model
+    spec = logical_to_mesh_spec(("embed", "mlp"), mesh, (256, 512))
+    assert spec == P("data", "model"), spec
+
+    # batch=1 falls back to replication
+    assert batch_spec(mesh, 1, batch_size=1) == P(None, None)
+    assert batch_spec(mesh, 1, batch_size=8) == P("data", None)
+
+    # axes never used twice
+    spec = logical_to_mesh_spec(("vocab", "mlp"), mesh, (1024, 1024))
+    flat = [a for part in spec if part for a in (part if isinstance(part, tuple) else (part,))]
+    assert len(flat) == len(set(flat)), spec
+
+    # indivisible everywhere -> fully replicated
+    spec = logical_to_mesh_spec(("heads", "mlp"), mesh, (3, 7))
+    assert spec == P(None, None), spec
+    print("SHARDING_OK")
+    """
+)
+
+
+def test_rule_solver_properties():
+    res = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, cwd="."
+    )
+    assert "SHARDING_OK" in res.stdout, res.stdout + res.stderr
+
+
+def test_hlo_collective_parser():
+    from repro.roofline.hlo import collective_stats
+
+    hlo = """
+HloModule test
+
+%loop_body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = parameter(0)
+  %arloop = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %x), replica_groups={}
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[16,16] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  %ag = bf16[64,512]{1,0} all-gather(bf16[64,32]{1,0} %y), dimensions={1}
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %z)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%loop_body.1
+}
+"""
+    stats = collective_stats(hlo)
+    ar = 2 * 128 * 256 * 4  # all-reduce wire = 2× shape
+    ag = 64 * 512 * 2
+    a2a = 16 * 16 * 4
+    ar_loop = 2 * 8 * 8 * 4
+    assert stats["by_type_bytes"]["all-reduce"] == ar + ar_loop
+    assert stats["by_type_bytes"]["all-gather"] == ag
+    assert stats["by_type_bytes"]["all-to-all"] == a2a
+    assert stats["total_bytes"] == ar + ag + a2a + ar_loop
+    assert stats["in_while_bytes"] == ar_loop  # loop-body collective classified
+    assert stats["by_type_count"] == {"all-reduce": 2, "all-gather": 1, "all-to-all": 1}

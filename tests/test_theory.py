@@ -1,0 +1,76 @@
+"""Theory calculators (Lemma 1 / Eq. 5 / Theorem 4) — the math itself."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import (
+    SEBSTheory,
+    optimal_batch,
+    optimal_ratio,
+    psi_bound,
+    psi_min,
+)
+
+
+@given(
+    C=st.floats(1e2, 1e8),
+    gap=st.floats(0.1, 100.0),
+    sigma=st.floats(0.1, 50.0),
+    alpha=st.floats(0.1, 1.0),
+    eta=st.floats(1e-4, 10.0),
+    b=st.floats(1.0, 1e4),
+)
+@settings(max_examples=200, deadline=None)
+def test_psi_min_is_global_lower_bound(C, gap, sigma, alpha, eta, b):
+    """ψ(η,b) ≥ 2·gap·σ/(α√C) for every (η,b) — the paper's AM-GM bound."""
+    assert psi_bound(eta, b, C, gap, sigma, alpha) >= psi_min(C, gap, sigma, alpha) * (1 - 1e-9)
+
+
+@given(
+    C=st.floats(1e2, 1e8),
+    gap=st.floats(0.1, 100.0),
+    sigma=st.floats(0.1, 50.0),
+    alpha=st.floats(0.1, 1.0),
+    b=st.floats(1.0, 1e4),
+)
+@settings(max_examples=100, deadline=None)
+def test_optimal_ray_attains_min(C, gap, sigma, alpha, b):
+    """Any (η,b) with η/b = gap/(σ√C) attains the minimum (Eq. 5)."""
+    eta = optimal_ratio(C, gap, sigma) * b
+    val = psi_bound(eta, b, C, gap, sigma, alpha)
+    assert val == pytest.approx(psi_min(C, gap, sigma, alpha), rel=1e-6)
+
+
+def test_optimal_batch_inverse_in_gap():
+    """b* ∝ 1/gap — the Fig. 2 relationship."""
+    C, sigma, alpha, L = 1e4, 10.0, 1.0, 100.0
+    b10 = optimal_batch(C, 10.0, sigma, alpha, L)
+    b50 = optimal_batch(C, 50.0, sigma, alpha, L)
+    b100 = optimal_batch(C, 100.0, sigma, alpha, L)
+    assert b10 == pytest.approx(5 * b50, rel=1e-9)
+    assert b10 == pytest.approx(10 * b100, rel=1e-9)
+
+
+def test_theorem4_stage_quantities():
+    th = SEBSTheory(sigma=1.0, alpha=1.0, mu=1.0, L=100.0, rho=2.0)
+    assert th.theta == pytest.approx(32 * 4)  # 32σ²ρ²/(α²μ)
+    # bₛ doubles when εₛ halves (Eq. 8: b ∝ 1/ε)
+    assert th.stage_batch(0.1) == pytest.approx(2 * th.stage_batch(0.2), rel=1e-9)
+    # Cₛ = θ/εₛ
+    assert th.stage_compute(0.5) == pytest.approx(th.theta / 0.5)
+    # ηₛ from Eq. 7 stays ≤ α/(2L) when bₛ from Eq. 8
+    eps = 0.01
+    eta = th.stage_lr(th.stage_batch(eps), eps)
+    assert eta <= 1.0 / (2 * 100.0) * (1 + 1e-9)
+
+
+def test_iteration_complexity_log_vs_linear():
+    """SEBS iteration complexity is O(log 1/ε); classical is O(1/ε)."""
+    th = SEBSTheory(sigma=1.0, alpha=1.0, mu=1.0, L=10.0, rho=2.0)
+    it_small = th.iteration_complexity(1.0, 1e-2)
+    it_tiny = th.iteration_complexity(1.0, 1e-4)
+    assert it_tiny == pytest.approx(2 * it_small, rel=0.01)  # log scaling
+    cls_small = th.classical_iteration_complexity(1e-2, G=1.0)
+    cls_tiny = th.classical_iteration_complexity(1e-4, G=1.0)
+    assert cls_tiny == pytest.approx(100 * cls_small)  # linear in 1/ε
