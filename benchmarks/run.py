@@ -12,7 +12,7 @@ import time
 import traceback
 
 from benchmarks import adaptive_sebs, fig1_util, fig2_optimal_batch, fig3_stagewise
-from benchmarks import kernel_bench, roofline_report, table1_updates
+from benchmarks import kernel_bench, roofline_report, serve_throughput, table1_updates
 
 MODULES = {
     "fig1": fig1_util,
@@ -22,6 +22,7 @@ MODULES = {
     "kernels": kernel_bench,
     "roofline": roofline_report,
     "adaptive": adaptive_sebs,
+    "serve": serve_throughput,
 }
 
 

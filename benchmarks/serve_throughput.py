@@ -1,0 +1,123 @@
+"""Serving throughput: static batching vs continuous batching + admission ramp.
+
+For each load level (number of simultaneously-arriving requests) measures
+tokens/sec and per-request latency percentiles (p50/p99, all requests
+arriving at t=0):
+
+- ``static``: requests are served in consecutive fixed-size batches through
+  :class:`ServeEngine` — a batch must fully finish before the next starts,
+  so early finishers wait for stragglers and queued requests wait for whole
+  batches.
+- ``continuous``: all requests enter the FIFO queue of
+  :class:`ContinuousBatchingEngine`; freed slots are recycled
+  mid-decode-loop and the slot budget ramps stagewise (b₁ρˢ) under
+  sustained load.
+
+Compilation is excluded from both timings via a warmup pass that visits
+every decode shape (the continuous engine's per-stage compile cache is kept
+and only its admission stage/stats are reset for the timed run).
+
+Usage: ``PYTHONPATH=src python -m benchmarks.serve_throughput`` (or through
+``python -m benchmarks.run --only serve``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ContinuousBatchingEngine, ServeEngine
+
+ARCH = "qwen2.5-3b"
+PROMPT_LEN = 8
+NEW_TOKENS = 16
+CACHE_LEN = 64
+SLOTS = 4  # static batch size == continuous max ring width
+LOADS = (4, 16)
+
+
+def _prompts(cfg, n: int, key: int = 1) -> np.ndarray:
+    return np.asarray(
+        jax.random.randint(jax.random.key(key), (n, PROMPT_LEN), 0, cfg.vocab_size)
+    )
+
+
+def _pct(lat, q):
+    return float(np.percentile(np.asarray(lat), q))
+
+
+def _bench_static(model, params, prompts) -> tuple[float, list]:
+    engine = ServeEngine(model, params, cache_len=CACHE_LEN)
+    engine.generate(prompts[:SLOTS], max_new_tokens=NEW_TOKENS)  # warmup/compile
+    lat = []
+    t0 = time.perf_counter()
+    done = 0
+    while done < len(prompts):
+        chunk = prompts[done : done + SLOTS]
+        if len(chunk) < SLOTS:  # pad to the compiled batch shape
+            chunk = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], SLOTS - len(chunk), axis=0)]
+            )
+        engine.generate(chunk, max_new_tokens=NEW_TOKENS)
+        batch_done = time.perf_counter() - t0
+        n = min(SLOTS, len(prompts) - done)
+        lat.extend([batch_done] * n)  # every request in the batch waits for it
+        done += n
+    elapsed = time.perf_counter() - t0
+    return elapsed, lat
+
+
+def _bench_continuous(model, params, prompts) -> tuple[float, list]:
+    engine = ContinuousBatchingEngine(
+        model, params, cache_len=CACHE_LEN, max_slots=SLOTS, b1=1, rho=2.0, patience=1
+    )
+    # warmup: same load shape, visits every stage width once (compile cache
+    # is per-engine and keyed on ring width)
+    for p in prompts:
+        engine.submit(p, max_new_tokens=NEW_TOKENS)
+    engine.run()
+    # reset the ramp + stats; keep the compiled decode variants
+    engine.admission.stage = 0
+    engine.admission._pressure = 0
+    engine.stats.update(ticks=0, decoded_tokens=0, peak_width=0, stage_history=[])
+
+    t0 = time.perf_counter()
+    ids = [engine.submit(p, max_new_tokens=NEW_TOKENS) for p in prompts]
+    engine.run()
+    elapsed = time.perf_counter() - t0
+    lat = [engine.scheduler.requests[r].latency for r in ids]
+    return elapsed, lat
+
+
+def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+    cfg = get_config(ARCH, "smoke")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    rows = []
+    for load in LOADS:
+        prompts = _prompts(cfg, load)
+        total_tokens = load * NEW_TOKENS
+        for name, bench in (("static", _bench_static), ("continuous", _bench_continuous)):
+            elapsed, lat = bench(model, params, prompts)
+            tps = total_tokens / elapsed
+            rows.append(
+                (
+                    f"serve_{name}_load{load}",
+                    round(elapsed / total_tokens * 1e6, 1),
+                    f"{tps:.1f} tok/s p50={_pct(lat, 50) * 1e3:.0f}ms p99={_pct(lat, 99) * 1e3:.0f}ms",
+                )
+            )
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_token,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

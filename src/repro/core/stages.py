@@ -49,7 +49,10 @@ class StageController:
     def plan(self, samples_consumed: int) -> StepPlan:
         info: StageInfo = self.schedule.info(samples_consumed)
         if self.mode == "accumulate":
-            accum = max(1, round(info.batch_size / self.microbatch))
+            # ceil, not round: the planned batch must never undershoot the
+            # schedule's bₛ (e.g. b = 1.4·micro rounded down to 1 microbatch
+            # would silently shrink the stage batch)
+            accum = max(1, math.ceil(info.batch_size / self.microbatch))
             bs = accum * self.microbatch
         else:
             accum = 1

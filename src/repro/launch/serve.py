@@ -1,7 +1,11 @@
-"""Serving launcher CLI: batched greedy generation through the KV-cache
-serve path.
+"""Serving launcher CLI: batched generation through the KV-cache serve path.
 
+    # static batch (seed behaviour)
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --batch 4
+
+    # continuous batching with a stagewise admission ramp
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --requests 12 --slots 8 --b1 2 --rho 2.0
 """
 from __future__ import annotations
 
@@ -12,7 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingEngine, ServeEngine
 from repro.utils.log import get_logger
 
 log = get_logger("serve")
@@ -22,7 +26,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--variant", default="smoke")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["static", "continuous"], default="static")
+    ap.add_argument("--batch", type=int, default=4, help="static: batch size")
+    ap.add_argument("--requests", type=int, default=8, help="continuous: request count")
+    ap.add_argument("--slots", type=int, default=4, help="continuous: max slot-ring width")
+    ap.add_argument("--b1", type=int, default=None,
+                    help="continuous: initial slot budget (default: --slots, no ramp)")
+    ap.add_argument("--rho", type=float, default=2.0, help="continuous: stage growth factor")
+    ap.add_argument("--patience", type=int, default=2,
+                    help="continuous: sustained-load ticks before a stage bump")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
@@ -31,14 +45,40 @@ def main() -> None:
     cfg = get_config(args.arch, args.variant)
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
-    engine = ServeEngine(model, params, cache_len=args.cache_len)
-    prompts = np.asarray(
-        jax.random.randint(jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+
+    if args.engine == "static":
+        engine = ServeEngine(model, params, cache_len=args.cache_len)
+        prompts = np.asarray(
+            jax.random.randint(jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+        )
+        out = engine.generate(prompts, max_new_tokens=args.new_tokens)
+        for i, row in enumerate(out):
+            log.info("req %d: %s -> %s", i, row[: args.prompt_len].tolist(),
+                     row[args.prompt_len:].tolist())
+        return
+
+    engine = ContinuousBatchingEngine(
+        model, params, cache_len=args.cache_len, max_slots=args.slots,
+        b1=args.b1, rho=args.rho, patience=args.patience,
     )
-    out = engine.generate(prompts, max_new_tokens=args.new_tokens)
-    for i, row in enumerate(out):
-        log.info("req %d: %s -> %s", i, row[: args.prompt_len].tolist(),
+    prompts = np.asarray(
+        jax.random.randint(jax.random.key(1), (args.requests, args.prompt_len), 0, cfg.vocab_size)
+    )
+    ids = [
+        engine.submit(p, max_new_tokens=args.new_tokens,
+                      temperature=args.temperature, top_k=args.top_k)
+        for p in prompts
+    ]
+    results = engine.run()
+    for rid in ids:
+        row = results[rid]
+        log.info("req %d: %s -> %s", rid, row[: args.prompt_len].tolist(),
                  row[args.prompt_len:].tolist())
+    log.info(
+        "admission ladder %s | peak width %d | %d decode ticks | %d tokens | %d compiled stage(s)",
+        engine.admission.ladder, engine.stats["peak_width"], engine.stats["ticks"],
+        engine.stats["decoded_tokens"], engine.decode_compiles,
+    )
 
 
 if __name__ == "__main__":

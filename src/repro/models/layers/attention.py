@@ -181,17 +181,27 @@ def apply(
 
     new_cache = cache
     if decode:
-        # write new kv at cache_index; attend to the full (seq-sharded) cache
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        # write new kv at cache_index; attend to the full (seq-sharded) cache.
+        # cache_index may be a scalar (static batch: all rows at one depth) or
+        # a (B,) vector (slot ring: each request at its own decode depth).
+        idx = jnp.asarray(cache_index, jnp.int32)
+        k_pos = jnp.arange(cache["k"].shape[1])[None, :]
+        if idx.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            write_pos = idx
+        else:
+            rows = jnp.arange(idx.shape[0])
+            k_cache = cache["k"].at[rows, idx].set(k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, idx].set(v[:, 0].astype(cache["v"].dtype))
+            write_pos = idx[:, None]
         k_cache = constrain(k_cache, CACHE_AXES["k"])
         v_cache = constrain(v_cache, CACHE_AXES["v"])
         new_cache = {"k": k_cache, "v": v_cache}
-        k_pos = jnp.arange(cache["k"].shape[1])[None, :]
-        valid = k_pos <= cache_index
+        valid = k_pos <= write_pos
         if sliding_window is not None:
-            valid = valid & (k_pos > cache_index - sliding_window)
-        mask = valid[:, None, :]  # (1, q=1, K)
+            valid = valid & (k_pos > write_pos - sliding_window)
+        mask = valid[:, None, :]  # (1 or B, q=1, K)
         mask = jnp.broadcast_to(mask, (b, 1, k_cache.shape[1]))
         out = _sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg)
     else:

@@ -132,11 +132,36 @@ class LanguageModel:
                 axes[f"seg{i}"] = a
         return axes
 
-    def prefill(self, params, batch, cache):
-        """Full-sequence forward filling the cache. Returns (logits, cache)."""
+    # -- continuous-batching slot helpers ------------------------------------
+    # Cache leaves are stacked over the scanned ``layers`` axis
+    # (init_segment_cache), so the batch/slot dimension is axis 1:
+    # (layers, batch, ...).
+
+    def cache_insert(self, cache, slot_cache, slot: int):
+        """In-place-style insertion of a batch-1 ``slot_cache`` (e.g. a fresh
+        prefill) into row ``slot`` of a wider slot-ring ``cache``."""
+        return jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1
+            ),
+            cache,
+            slot_cache,
+        )
+
+    def cache_extract(self, cache, slot: int):
+        """Batch-1 slice of row ``slot`` (inverse of :meth:`cache_insert`)."""
+        return jax.tree.map(
+            lambda full: jax.lax.dynamic_slice_in_dim(full, slot, 1, axis=1), cache
+        )
+
+    def prefill(self, params, batch, cache, memory=None):
+        """Full-sequence forward filling the cache. Returns (logits, cache).
+        ``memory`` may carry a precomputed encoder output (else it is
+        encoded from ``batch`` here)."""
         cfg = self.cfg
         x = self._embed_inputs(params, batch)
-        memory = self._encode(params, batch)
+        if memory is None:
+            memory = self._encode(params, batch)
         b, s = batch["tokens"].shape
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
         new_cache = {}
@@ -152,11 +177,17 @@ class LanguageModel:
         return logits, new_cache
 
     def decode_step(self, params, token, cache, cache_index, memory=None):
-        """One-token decode. token: (B,1) int32; cache_index: scalar int32.
-        Returns (logits (B,1,V), new_cache)."""
+        """One-token decode. token: (B,1) int32; cache_index: scalar int32, or
+        (B,) int32 when every batch row (slot) decodes at its own depth —
+        the continuous-batching path. Returns (logits (B,1,V), new_cache)."""
         cfg = self.cfg
         x = embedding.embed(params["embed"], token, cfg)
-        positions = jnp.full((token.shape[0], 1), cache_index, jnp.int32)
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim == 0:
+            positions = jnp.full((token.shape[0], 1), idx, jnp.int32)
+        else:
+            positions = idx[:, None]
+        cache_index = idx
         new_cache = {}
         for i, seg in enumerate(cfg.segments):
             x, c, _ = blocks.apply_segment(

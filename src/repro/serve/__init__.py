@@ -1,4 +1,22 @@
-from repro.serve.step import build_decode_step, build_prefill_step
-from repro.serve.engine import ServeEngine
+from repro.serve.step import (
+    build_decode_step,
+    build_prefill_step,
+    build_slot_decode_step,
+    sample_tokens,
+)
+from repro.serve.scheduler import AdmissionController, Request, RequestScheduler
+from repro.serve.slots import SlotManager
+from repro.serve.engine import ContinuousBatchingEngine, ServeEngine
 
-__all__ = ["build_decode_step", "build_prefill_step", "ServeEngine"]
+__all__ = [
+    "AdmissionController",
+    "ContinuousBatchingEngine",
+    "Request",
+    "RequestScheduler",
+    "ServeEngine",
+    "SlotManager",
+    "build_decode_step",
+    "build_prefill_step",
+    "build_slot_decode_step",
+    "sample_tokens",
+]

@@ -1,16 +1,38 @@
-"""Minimal batched serving engine: prefill a batch of prompts, then decode
-greedily token-by-token (used by examples/serve_demo.py and the serving
-integration tests)."""
+"""Serving engines.
+
+Two engines share the model's prefill/decode cache path:
+
+- :class:`ServeEngine` — the static-batch baseline: one fixed batch of
+  same-length prompts, prefilled together and decoded greedily in lockstep.
+- :class:`ContinuousBatchingEngine` — the production-shaped path: requests
+  enter a FIFO queue (:mod:`repro.serve.scheduler`), are prefilled one at a
+  time and *inserted into a freed slot of the live KV cache mid-decode-loop*
+  (``LanguageModel.cache_insert``), and a fixed-shape jitted decode tick
+  advances every slot at its own depth with per-slot sampling params. The
+  active slot budget ramps stagewise (b₁ρˢ) under sustained load via
+  :class:`~repro.serve.scheduler.AdmissionController` — the serving mirror
+  of SEBS's stagewise batch enlargement — and each stage compiles exactly
+  one decode variant (``engine._decodes``, mirroring
+  ``SEBSTrainer._steps``).
+"""
 from __future__ import annotations
 
-from typing import Optional
+from collections import deque
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LanguageModel
-from repro.serve.step import build_decode_step, build_prefill_step
+from repro.serve.scheduler import DONE, AdmissionController, RequestScheduler
+from repro.serve.slots import SlotManager
+from repro.serve.step import (
+    build_decode_step,
+    build_prefill_step,
+    build_slot_decode_step,
+    sample_tokens,
+)
 
 
 class ServeEngine:
@@ -44,3 +66,199 @@ class ServeEngine:
             )
             token = jnp.argmax(logits[:, -1, : self.model.cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
         return np.asarray(jnp.concatenate(out, axis=1))
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching engine with a stagewise admission ramp.
+
+    Usage: ``submit()`` any number of requests (mixed prompt lengths,
+    per-request ``max_new_tokens`` / ``temperature`` / ``top_k``), then
+    ``run()`` to completion. ``run`` returns ``{request_id: (P+new,) tokens}``.
+
+    ``b1``/``rho``/``max_slots``/``patience`` parameterize the admission
+    ramp; the default ``b1=None`` starts at ``max_slots`` (no ramp). With
+    ``b1 < max_slots`` the slot ring starts narrow and is enlarged
+    geometrically only under sustained queue pressure, so light traffic pays
+    the smallest decode batch and heavy traffic amortizes per-token dispatch
+    over a wide ring — one compiled decode variant per stage.
+    """
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        cache_len: int = 256,
+        max_slots: int = 8,
+        b1: Optional[int] = None,
+        rho: float = 2.0,
+        patience: int = 2,
+        admission: Optional[AdmissionController] = None,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.admission = admission or AdmissionController(
+            b1=b1 if b1 is not None else max_slots,
+            rho=rho,
+            max_slots=max_slots,
+            patience=patience,
+        )
+        self.scheduler = RequestScheduler()
+        # jax.jit caches prefill executables per prompt length internally
+        self._prefill = build_prefill_step(model, donate=False)
+
+        def prefill_encdec(params, batch, cache):
+            # encode once, share the memory between prefill and decode
+            memory = model._encode(params, batch)
+            logits, cache = model.prefill(params, batch, cache, memory=memory)
+            return logits, cache, memory
+
+        self._prefill_encdec = jax.jit(prefill_encdec)
+        self._decodes: Dict[int, Any] = {}  # ring width -> jitted decode tick
+        self.decode_compiles = 0  # compile-count hook (cf. SEBSTrainer._steps)
+        self._rng = jax.random.key(seed)
+        self.stats: Dict[str, Any] = {
+            "ticks": 0,
+            "decoded_tokens": 0,
+            "peak_width": 0,
+            # bounded: a long-lived engine ticks indefinitely
+            "stage_history": deque(maxlen=4096),
+        }
+
+    # -- request intake ------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        memory=None,
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size + max_new_tokens <= self.cache_len, "cache_len too small"
+        if self.model.cfg.is_encoder_decoder and memory is None:
+            raise ValueError("encoder-decoder model requires per-request audio memory")
+        return self.scheduler.submit(
+            prompt, max_new_tokens, temperature=temperature, top_k=top_k, memory=memory
+        )
+
+    # -- compiled-step caches ------------------------------------------------
+    def _decode_for(self, width: int):
+        if width not in self._decodes:
+            self._decodes[width] = build_slot_decode_step(self.model, donate=False)
+            self.decode_compiles += 1
+        return self._decodes[width]
+
+    # -- device-state plumbing ----------------------------------------------
+    def _grow_cache(self, cache, new_width: int):
+        # cache_insert handles arbitrary-width inserts: the old ring is one
+        # wide "slot" written at row 0 of the fresh, wider cache
+        grown = self.model.init_cache(new_width, self.cache_len)
+        return self.model.cache_insert(grown, cache, 0)
+
+    def _prefill_request(self, req):
+        """Batch-1 prefill of one admitted request. Returns the sampled first
+        token, the request's batch-1 cache (ready for ``cache_insert``), and
+        the encoder memory row (encoder-decoder models only)."""
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        cache = self.model.init_cache(1, self.cache_len)
+        memory_row = None
+        if self.model.cfg.is_encoder_decoder:
+            batch["audio_embeds"] = jnp.asarray(req.memory)
+            logits, cache, memory_row = self._prefill_encdec(self.params, batch, cache)
+        else:
+            logits, cache = self._prefill(self.params, batch, cache)
+        self._rng, sub = jax.random.split(self._rng)
+        first = sample_tokens(
+            logits[:, -1, : self.model.cfg.vocab_size].astype(jnp.float32),
+            sub,
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+        )
+        return int(first[0]), cache, memory_row
+
+    # -- the serve loop ------------------------------------------------------
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive admission + decode until every submitted request is done.
+        Returns results for the requests completed during THIS call only
+        (re-running a long-lived engine does not replay old results)."""
+        completed: Dict[int, np.ndarray] = {}
+        width = self.admission.budget()
+        slots = SlotManager(width)
+        cache = self.model.init_cache(width, self.cache_len)
+        memory_buf = None
+        if self.model.cfg.is_encoder_decoder:
+            cfg = self.model.cfg
+            memory_buf = jnp.zeros(
+                (width, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+            )
+
+        while self.scheduler.has_work():
+            # 1. stagewise ramp: enlarge the ring under sustained pressure
+            budget = self.admission.observe(self.scheduler.demand)
+            if budget > width:
+                cache = self._grow_cache(cache, budget)
+                slots.grow(budget)
+                if memory_buf is not None:
+                    pad = jnp.zeros(
+                        (budget - width,) + memory_buf.shape[1:], memory_buf.dtype
+                    )
+                    memory_buf = jnp.concatenate([memory_buf, pad], axis=0)
+                width = budget
+            self.stats["peak_width"] = max(self.stats["peak_width"], width)
+
+            # 2. admit queued requests into freed slots (mid-decode-loop
+            #    in-place cache insertion)
+            for i in slots.free_indices():
+                req = self.scheduler.pop_waiting()
+                if req is None:
+                    break
+                first, slot_cache, memory_row = self._prefill_request(req)
+                cache = self.model.cache_insert(cache, slot_cache, i)
+                if memory_row is not None:
+                    memory_buf = jax.lax.dynamic_update_slice_in_dim(
+                        memory_buf, memory_row.astype(memory_buf.dtype), i, axis=0
+                    )
+                slots.admit(i, req, first)
+                if len(req.generated) >= req.max_new_tokens:
+                    self.scheduler.finish(req)
+                    completed[req.id] = req.tokens()
+                    slots.release(i)
+            if not slots.num_active():
+                continue
+
+            # 3. one fixed-shape decode tick over the whole ring
+            step = self._decode_for(width)
+            self._rng, sub = jax.random.split(self._rng)
+            nxt, cache, _ = step(
+                self.params,
+                jnp.asarray(slots.tokens[:, None]),
+                cache,
+                jnp.asarray(slots.positions()),
+                jnp.asarray(slots.active_mask()),
+                jnp.asarray(slots.temperatures()),
+                jnp.asarray(slots.top_ks()),
+                sub,
+                memory=memory_buf,
+            )
+            self.stats["ticks"] += 1
+            self.stats["decoded_tokens"] += slots.num_active()
+            self.stats["stage_history"].append(self.admission.stage)
+
+            # 4. bookkeeping: collect finished requests, free their slots
+            for i in slots.advance(np.asarray(nxt)):
+                req = slots.slots[i].request
+                self.scheduler.finish(req)
+                completed[req.id] = req.tokens()
+                slots.release(i)
+
+        return completed
+
+    def latencies(self) -> Dict[int, float]:
+        """Per-request wall-clock latency (submit → finish) for DONE requests."""
+        return {
+            rid: req.latency
+            for rid, req in self.scheduler.requests.items()
+            if req.state == DONE
+        }

@@ -1,0 +1,196 @@
+"""Request scheduling for the continuous-batching engine.
+
+Two host-side pieces:
+
+- :class:`RequestScheduler` — a FIFO admission queue plus per-request
+  lifecycle state (QUEUED → RUNNING → DONE) and wall-clock timestamps, so
+  the benchmark can report per-request latency percentiles.
+- :class:`AdmissionController` — the serving mirror of the paper's SEBS
+  batch schedule. Instead of growing the *training* batch ``bₛ = b₁ρˢ`` per
+  stage, it grows the *active decode slot budget* geometrically under
+  sustained load. Per-token scheduling/dispatch overhead then amortizes over
+  the widening slot ring exactly the way per-update communication amortizes
+  over the widening train batch, and — like the training-side
+  ``StageController`` — each stage corresponds to exactly one compiled
+  decode variant (the engine keys its jit cache on the stage's slot width).
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.schedules import SEBS, Schedule
+
+QUEUED, RUNNING, DONE = "queued", "running", "done"
+
+
+@dataclass
+class Request:
+    """One generation request. ``prompt`` is a (P,) int32 token array;
+    ``temperature == 0`` means greedy; ``top_k == 0`` means full vocab.
+    ``memory`` carries per-request encoder input (1, T, d) for
+    encoder-decoder models (whisper)."""
+
+    id: int
+    prompt: np.ndarray
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    memory: Optional[Any] = None
+    state: str = QUEUED
+    generated: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_submit
+
+    def tokens(self) -> np.ndarray:
+        """Prompt + generated tokens, the (P + new,) result row."""
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32), np.asarray(self.generated, np.int32)]
+        )
+
+
+class RequestScheduler:
+    """FIFO queue + lifecycle bookkeeping. Pure host-side Python."""
+
+    def __init__(self):
+        self._next_id = 0
+        self._queue: deque[Request] = deque()
+        self.requests: Dict[int, Request] = {}
+        self._running = 0
+
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        memory=None,
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert max_new_tokens >= 1
+        req = Request(
+            id=self._next_id,
+            prompt=prompt,
+            max_new_tokens=max_new_tokens,
+            temperature=float(temperature),
+            top_k=int(top_k),
+            memory=memory,
+            t_submit=time.perf_counter(),
+        )
+        self._next_id += 1
+        self._queue.append(req)
+        self.requests[req.id] = req
+        return req.id
+
+    def pop_waiting(self) -> Optional[Request]:
+        if not self._queue:
+            return None
+        req = self._queue.popleft()
+        req.state = RUNNING
+        self._running += 1
+        return req
+
+    def finish(self, req: Request) -> None:
+        req.state = DONE
+        req.t_finish = time.perf_counter()
+        self._running -= 1
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_running(self) -> int:
+        return self._running
+
+    @property
+    def demand(self) -> int:
+        """Requests wanting a slot right now (running + queued)."""
+        return self._running + len(self._queue)
+
+    def has_work(self) -> bool:
+        return self.demand > 0
+
+
+def _ladder_from_schedule(schedule: Schedule, max_slots: int) -> List[int]:
+    """Per-stage batch sizes of ``schedule``, clamped to ``max_slots`` and
+    truncated once the cap is reached (further stages change nothing).
+    Consecutive equal widths collapse into one rung (non-integer ρ can round
+    two stages to the same batch; a duplicate rung would stall the ramp for
+    a patience window and double-count a compiled decode variant)."""
+    ladder: List[int] = []
+    samples = 0
+    while True:
+        info = schedule.info(samples)
+        width = max(1, min(max_slots, info.batch_size))
+        if not ladder or width > ladder[-1]:
+            ladder.append(width)
+        if ladder[-1] >= max_slots or info.samples_end >= schedule.total_samples:
+            return ladder
+        samples = info.samples_end
+
+
+class AdmissionController:
+    """Stagewise slot-budget ramp b₁ → b₁ρ → b₁ρ² → … → max_slots.
+
+    The budget ladder is read off a :class:`~repro.core.schedules.Schedule`
+    (default: a SEBS instance with the requested ``b1``/``rho``), so the
+    serving ramp and the training batch schedule share one geometric law.
+    The stage advances only after ``patience`` consecutive observations of
+    demand exceeding the current budget — "sustained load" — so a transient
+    burst doesn't trigger a fresh decode compile.
+    """
+
+    def __init__(
+        self,
+        b1: int = 1,
+        rho: float = 2.0,
+        max_slots: int = 8,
+        patience: int = 2,
+        schedule: Optional[Schedule] = None,
+    ):
+        assert max_slots >= 1 and b1 >= 1 and patience >= 1
+        if schedule is None and (b1 >= max_slots or rho <= 1.0):
+            # no ramp possible: budget already at cap, or no growth factor —
+            # a flat single-stage ladder (SEBS itself requires rho > 1)
+            self.ladder = [min(b1, max_slots)]
+        else:
+            if schedule is None:
+                # enough stages for b₁ρˢ to reach max_slots (stage budgets
+                # are a dummy: only per-stage batch sizes are consumed here)
+                stages = 1 + math.ceil(math.log(max_slots / b1) / math.log(rho))
+                schedule = SEBS(b1=b1, C1=1, rho=rho, num_stages=stages, eta=0.0)
+            self.ladder = _ladder_from_schedule(schedule, max_slots)
+        self.schedule = schedule
+        self.max_slots = max_slots
+        self.patience = patience
+        self.stage = 0
+        self._pressure = 0
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.ladder)
+
+    def budget(self) -> int:
+        return self.ladder[self.stage]
+
+    def observe(self, demand: int) -> int:
+        """Feed one scheduler tick's demand; returns the (possibly newly
+        enlarged) slot budget."""
+        if demand > self.budget() and self.stage + 1 < len(self.ladder):
+            self._pressure += 1
+            if self._pressure >= self.patience:
+                self.stage += 1
+                self._pressure = 0
+        else:
+            self._pressure = 0
+        return self.budget()

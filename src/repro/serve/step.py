@@ -33,3 +33,49 @@ def build_decode_step(model: LanguageModel, *, donate: bool = True):
 
     kwargs = {"donate_argnums": (2,)} if donate else {}
     return jax.jit(decode, **kwargs)
+
+
+def sample_tokens(logits, key, temperature, top_k):
+    """Per-row token sampling. logits: (B, V) f32; temperature: (B,) f32
+    (0 → greedy); top_k: (B,) int32 (0 → full vocab). Rows are independent,
+    so mixed greedy/sampled requests share one decode step."""
+    b, v = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # per-row top-k truncation: drop logits below the k-th largest value
+    sorted_desc = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    kth = jnp.take_along_axis(
+        sorted_desc, jnp.clip(top_k - 1, 0, v - 1)[:, None], axis=1
+    )
+    masked = jnp.where((top_k[:, None] > 0) & (logits < kth), -jnp.inf, logits)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jnp.argmax(
+        scaled + jax.random.gumbel(key, (b, v), jnp.float32), axis=-1
+    ).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
+def build_slot_decode_step(model: LanguageModel, *, donate: bool = True):
+    """Fixed-shape decode tick over the slot ring (continuous batching).
+
+    Every slot advances one token at its own cache depth; freed slots ride
+    along masked out (their sampled token is discarded and their depth does
+    not advance), so the compiled shape depends only on the ring width — one
+    compile per admission stage.
+
+    Inputs per call: tokens (B, 1) int32, cache, cache_pos (B,) int32,
+    active (B,) bool, temperature (B,) f32, top_k (B,) int32, key (PRNG),
+    memory (optional encoder output (B, T, d)).
+    Returns (next_token (B,) int32, new_cache, new_pos (B,) int32).
+    """
+    vocab = model.cfg.vocab_size
+
+    def step(params, tokens, cache, cache_pos, active, temperature, top_k, key, memory=None):
+        logits, new_cache = model.decode_step(params, tokens, cache, cache_pos, memory=memory)
+        logits = logits[:, -1, :vocab].astype(jnp.float32)
+        nxt = sample_tokens(logits, key, temperature, top_k)
+        nxt = jnp.where(active, nxt, tokens[:, 0])
+        new_pos = jnp.where(active, cache_pos + 1, cache_pos)
+        return nxt, new_cache, new_pos
+
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(step, **kwargs)

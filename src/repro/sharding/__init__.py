@@ -5,6 +5,7 @@ from repro.sharding.partitioning import (
     shard_tree,
     constrain,
     batch_spec,
+    legacy_manual_axes,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "shard_tree",
     "constrain",
     "batch_spec",
+    "legacy_manual_axes",
 ]

@@ -10,6 +10,7 @@ This keeps one rule table valid across all ten assigned architectures.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from typing import Any, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -58,6 +59,24 @@ LOGICAL_RULES: dict[str, Tuple[str, ...]] = {
 }
 
 
+# Pre-axis_types jax cannot see shard_map manual axes on the mesh object;
+# the legacy _shard_map wrapper (train/step.py) declares them here instead.
+_LEGACY_MANUAL_AXES: set = set()
+
+
+@contextmanager
+def legacy_manual_axes(axes: Sequence[str]):
+    """Declare mesh axes as shard_map-Manual for constrain() on jax versions
+    whose Mesh carries no axis_types."""
+    saved = set(_LEGACY_MANUAL_AXES)
+    _LEGACY_MANUAL_AXES.update(axes)
+    try:
+        yield
+    finally:
+        _LEGACY_MANUAL_AXES.clear()
+        _LEGACY_MANUAL_AXES.update(saved)
+
+
 def _mesh_axis_sizes(mesh) -> Mapping[str, int]:
     # works for both Mesh and AbstractMesh: .shape is a name→size mapping.
     # Axes in Manual mode (inside shard_map) are excluded: constraints may
@@ -71,6 +90,8 @@ def _mesh_axis_sizes(mesh) -> Mapping[str, int]:
                 sizes.pop(name, None)
     except Exception:  # pragma: no cover - older mesh objects
         pass
+    for name in _LEGACY_MANUAL_AXES:
+        sizes.pop(name, None)
     return sizes
 
 
@@ -156,8 +177,24 @@ def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]], mesh=None):
     try:
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     except ValueError:
-        # AbstractMesh (from jax.set_mesh): pass the PartitionSpec directly
-        return jax.lax.with_sharding_constraint(x, spec)
+        try:
+            # AbstractMesh (from jax.set_mesh): pass the PartitionSpec directly
+            return jax.lax.with_sharding_constraint(x, spec)
+        except ValueError:
+            # legacy shard_map manual region (pre-axis_types jax: Mesh does
+            # not expose Manual axes, so the spec may reference one) —
+            # constraints are hints; skip rather than crash the trace. Only
+            # when the spec actually touches a declared manual axis: any
+            # other ValueError is a real spec bug and must surface.
+            spec_axes = {
+                a
+                for entry in spec
+                if entry is not None
+                for a in ((entry,) if isinstance(entry, str) else entry)
+            }
+            if spec_axes & _LEGACY_MANUAL_AXES:
+                return x
+            raise
 
 
 def batch_spec(mesh: Mesh, extra_dims: int = 1, batch_size: Optional[int] = None) -> P:

@@ -31,6 +31,30 @@ from repro.train.state import TrainState, is_axes_leaf, state_axes
 from repro.utils.tree import tree_add, tree_scale
 
 
+def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """Version-portable shard_map: manual over ``manual_axes`` only (the
+    model axis stays automatic), no replication/VMA checking."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as sm  # jax <= 0.5
+
+    from repro.sharding import legacy_manual_axes
+
+    def body(*args):
+        # old Mesh objects carry no axis_types, so constrain() cannot see
+        # which axes are Manual — declare them for the trace explicitly
+        with legacy_manual_axes(manual_axes):
+            return f(*args)
+
+    return sm(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=frozenset(mesh.axis_names) - set(manual_axes),
+    )
+
+
 def _clip(grads, max_norm: float):
     if not max_norm:
         return grads, jnp.zeros((), jnp.float32)
@@ -170,13 +194,8 @@ def build_train_step(
                 P(),
             )
             out_specs = (jax.tree.map(lambda _: P(), state), P())
-            fn = jax.shard_map(
-                local_step,
-                mesh=mesh,
-                in_specs=in_specs,
-                out_specs=out_specs,
-                axis_names=set(batch_axes),
-                check_vma=False,
+            fn = _shard_map(
+                local_step, mesh, in_specs, out_specs, manual_axes=batch_axes
             )
             return fn(state, batch, lr, stage)
 

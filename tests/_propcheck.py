@@ -1,0 +1,83 @@
+"""Property-test shim: real hypothesis when installed, a fixed-example
+fallback otherwise — so tier-1 collection never depends on an optional
+package.
+
+The fallback implements exactly the subset of the hypothesis API this suite
+uses — ``given`` (keyword strategies), ``settings(max_examples, deadline)``
+and ``strategies.integers/floats/sampled_from`` — by drawing a
+deterministic example set (boundary values first, then seeded-random
+interior points) and running the test body once per example. Real
+hypothesis adds shrinking and the full example budget; install it via
+``requirements-dev.txt`` for local runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _MAX_FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, boundary, draw):
+            self._boundary = list(boundary)  # edge examples, always tested
+            self._draw = draw  # rng -> random interior example
+
+        def examples(self, rng, n):
+            out = list(self._boundary[:n])
+            while len(out) < n:
+                out.append(self._draw(rng))
+            return out
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value], lambda r: r.randint(min_value, max_value)
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                [min_value, max_value], lambda r: r.uniform(min_value, max_value)
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(elements, lambda r: r.choice(elements))
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            n = min(
+                getattr(fn, "_propcheck_max_examples", _MAX_FALLBACK_EXAMPLES),
+                _MAX_FALLBACK_EXAMPLES,
+            )
+            rng = random.Random(0)
+            examples = {name: s.examples(rng, n) for name, s in strats.items()}
+
+            # NOT functools.wraps: pytest would unwrap to the original
+            # signature and treat the strategy params as fixtures
+            def run():
+                for i in range(n):
+                    fn(**{k: v[i] for k, v in examples.items()})
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "strategies"]

@@ -65,7 +65,7 @@ _DEFERRED_SCRIPT = textwrap.dedent(
     tokens = jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab_size)
     stacked = {"tokens": tokens.reshape(2, 4, 16)}
 
-    with jax.set_mesh(mesh):
+    with mesh:
         step_d = build_train_step(model, opt, mesh, accum_steps=2, mode="deferred", donate=False)
         sd, md = step_d(state, stacked, jnp.float32(0.1), jnp.int32(0))
     step_p = build_train_step(model, opt, mesh=None, accum_steps=2, donate=False)

@@ -13,7 +13,13 @@ from repro.optim import make_optimizer
 from repro.train.state import TrainState
 from repro.train.step import build_train_step
 
-ARCHS = list_archs()
+# one dense-attention, one SSM-family arch in the fast tier-1 subset; the
+# full zoo sweep runs under `pytest -m slow`
+FAST_ARCHS = {"qwen2.5-3b", "rwkv6-1.6b"}
+ARCHS = [
+    a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in list_archs()
+]
 
 
 def _batch(cfg, b=2, s=16, key=0):

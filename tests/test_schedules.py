@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.schedules import SEBS, ClassicalStagewise, DBSGD, EpochStagewise
 from repro.core.stages import StageController
@@ -91,6 +91,21 @@ def test_controller_accumulate_mode_shapes():
     assert len(ctl.distinct_shapes()) == 3
     # compute budget conserved
     assert plans[-1].samples_after >= s.total_samples
+
+
+def test_controller_accumulate_never_undershoots_schedule_batch():
+    """Regression: ``round(b/micro)`` undershot for non-divisible ratios
+    (e.g. b = 1.4·micro → 1 microbatch < b). The plan must always cover the
+    schedule's stage batch."""
+    s = SEBS(b1=5, C1=100, rho=1.4, num_stages=4, eta=0.1)  # batches 5,7,10,14
+    ctl = StageController(s, microbatch=5, mode="accumulate")
+    begin = 0
+    for stage in range(4):
+        info = s.info(begin)
+        plan = ctl.plan(begin)
+        assert plan.batch_size >= info.batch_size, (stage, plan, info)
+        assert plan.batch_size % plan.microbatch == 0
+        begin = info.samples_end
 
 
 def test_controller_reshape_mode():

@@ -1,4 +1,6 @@
-"""Serving engine: greedy generation consistency with teacher forcing."""
+"""Serving engines: static-batch greedy consistency, and the continuous-
+batching engine — token-identity vs the static path, slot recycling, and
+the stagewise admission ramp's compile accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,17 +8,30 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import AdmissionController, ContinuousBatchingEngine, ServeEngine
+
+# fast subset runs two families (dense attn + rwkv); the rest ride -m slow
+ARCHS = [
+    "qwen2.5-3b",
+    "rwkv6-1.6b",
+    pytest.param("zamba2-2.7b", marks=pytest.mark.slow),
+    pytest.param("gemma2-9b", marks=pytest.mark.slow),
+]
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "rwkv6-1.6b", "zamba2-2.7b", "gemma2-9b"])
+def _setup(arch, key=0):
+    cfg = get_config(arch, "smoke")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(key))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
 def test_greedy_generation_matches_teacher_forced_forward(arch):
     """Feed the generated sequence back through forward(): every generated
     token must equal the forward argmax at its position (greedy decode
     consistency across prefill + decode cache paths)."""
-    cfg = get_config(arch, "smoke")
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.key(0))
+    cfg, model, params = _setup(arch)
     engine = ServeEngine(model, params, cache_len=64)
     prompts = np.asarray(jax.random.randint(jax.random.key(1), (2, 6), 0, cfg.vocab_size))
     out = engine.generate(prompts, max_new_tokens=5)
@@ -30,9 +45,7 @@ def test_greedy_generation_matches_teacher_forced_forward(arch):
 
 
 def test_whisper_generation_with_audio_memory():
-    cfg = get_config("whisper-tiny", "smoke")
-    model = build_model(cfg)
-    params, _ = model.init(jax.random.key(0))
+    cfg, model, params = _setup("whisper-tiny")
     engine = ServeEngine(model, params, cache_len=32)
     prompts = np.zeros((2, 4), np.int32)
     audio = 0.1 * np.asarray(
@@ -41,3 +54,161 @@ def test_whisper_generation_with_audio_memory():
     out = engine.generate(prompts, max_new_tokens=4, memory=jnp.asarray(audio, jnp.bfloat16))
     assert out.shape == (2, 8)
     assert (out[:, 4:] < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_continuous_batching_matches_static_greedy(arch):
+    """Continuous-batching greedy output is token-identical to the static
+    ServeEngine on every architecture family: per-slot decode depths,
+    one-hot cache writes and batch-1 prefill must not perturb a single
+    logit argmax."""
+    cfg, model, params = _setup(arch)
+    prompts = np.asarray(jax.random.randint(jax.random.key(1), (4, 6), 0, cfg.vocab_size))
+    ref = ServeEngine(model, params, cache_len=64).generate(prompts, max_new_tokens=6)
+    engine = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=4)
+    ids = [engine.submit(p, max_new_tokens=6) for p in prompts]
+    out = engine.run()
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(out[rid], ref[i], err_msg=f"request {i}")
+
+
+def test_slot_recycling_serves_more_requests_than_slots():
+    """N requests complete correctly through fewer than N slots in ONE
+    decode loop: freed slots are re-admitted mid-loop via in-place cache
+    insertion, and recycled slots produce the same tokens as a fresh
+    static batch."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    n_requests, n_slots = 6, 2
+    prompts = np.asarray(
+        jax.random.randint(jax.random.key(1), (n_requests, 6), 0, cfg.vocab_size)
+    )
+    ref = ServeEngine(model, params, cache_len=64).generate(prompts, max_new_tokens=5)
+    engine = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=n_slots)
+    ids = [engine.submit(p, max_new_tokens=5) for p in prompts]
+    out = engine.run()
+    assert len(out) == n_requests
+    assert engine.stats["peak_width"] == n_slots  # never widened past 2 slots
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(out[rid], ref[i], err_msg=f"request {i}")
+
+
+def test_admission_ramp_compiles_one_decode_variant_per_stage():
+    """The stagewise ramp mirrors StageController's compile-cache design:
+    exactly one compiled decode step per admission stage (asserted via the
+    engine's compile-count hook, as test_trainer_modes does for train
+    steps), and re-serving at known widths adds none."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    engine = ContinuousBatchingEngine(
+        model, params, cache_len=64, max_slots=4, b1=1, rho=2.0, patience=2
+    )
+    assert engine.admission.ladder == [1, 2, 4]
+    prompts = np.asarray(jax.random.randint(jax.random.key(1), (8, 4), 0, cfg.vocab_size))
+    ids = [engine.submit(p, max_new_tokens=8) for p in prompts]
+    out = engine.run()
+    assert set(out) == set(ids)
+    # sustained 8-deep queue must ramp through every stage
+    assert engine.admission.stage == engine.admission.num_stages - 1
+    assert sorted(engine._decodes) == [1, 2, 4]
+    assert engine.decode_compiles == engine.admission.num_stages
+    # serving more traffic at the same widths reuses the compiled variants
+    ids2 = [engine.submit(p, max_new_tokens=4) for p in prompts[:3]]
+    out2 = engine.run()
+    assert set(ids2) <= set(out2)
+    assert engine.decode_compiles == engine.admission.num_stages
+
+
+def test_cache_insert_extract_roundtrip():
+    """cache_extract is cache_insert's inverse on the (layers, batch, ...)
+    slot layout — the contract the admission path's insertion relies on."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    wide = model.init_cache(3, 32)
+    batch = {"tokens": jnp.asarray(np.arange(4, dtype=np.int32)[None, :])}
+    _, one = model.prefill(params, batch, model.init_cache(1, 32))
+    wide = model.cache_insert(wide, one, 2)
+    back = model.cache_extract(wide, 2)
+    for a, b in zip(jax.tree.leaves(one), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    # untouched slots stay zero-initialized
+    other = model.cache_extract(wide, 0)
+    assert all(not np.asarray(leaf).any() for leaf in jax.tree.leaves(other))
+
+
+def test_admission_controller_sustained_load_gating():
+    """Budget follows b₁ρˢ only under sustained pressure; transient bursts
+    (shorter than ``patience``) never bump the stage."""
+    ctl = AdmissionController(b1=2, rho=2.0, max_slots=8, patience=2)
+    assert ctl.ladder == [2, 4, 8]
+    assert ctl.observe(10) == 2  # pressure tick 1 of 2
+    assert ctl.observe(1) == 2  # pressure reset: burst was transient
+    assert ctl.observe(10) == 2
+    assert ctl.observe(10) == 4  # sustained → stage 1
+    assert ctl.observe(10) == 4
+    assert ctl.observe(10) == 8  # stage 2 (cap)
+    assert ctl.observe(100) == 8  # saturated: never exceeds max_slots
+
+
+def test_continuous_sampling_params_per_slot():
+    """temperature=0 and top_k=1 must both reduce to greedy; temperature
+    sampling is reproducible per engine seed and stays in-vocab."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    prompts = np.asarray(jax.random.randint(jax.random.key(1), (2, 6), 0, cfg.vocab_size))
+    ref = ServeEngine(model, params, cache_len=64).generate(prompts, max_new_tokens=6)
+
+    eng = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=2, seed=7)
+    ids = [eng.submit(p, max_new_tokens=6, temperature=1.0, top_k=1) for p in prompts]
+    out = eng.run()
+    for i, rid in enumerate(ids):  # top-1 truncation == greedy
+        np.testing.assert_array_equal(out[rid], ref[i])
+
+    def sample_run():
+        e = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=2, seed=7)
+        rids = [e.submit(p, max_new_tokens=6, temperature=0.8, top_k=16) for p in prompts]
+        out = e.run()
+        return [out[r] for r in rids]
+
+    a, b = sample_run(), sample_run()
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra, rb)
+        assert (ra < cfg.vocab_size).all()
+
+
+def test_continuous_mixed_lengths_and_budgets():
+    """Mixed prompt lengths and per-request max_new_tokens share one ring;
+    max_new_tokens=1 completes at admission without a decode tick."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    engine = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=2)
+    p = np.asarray(jax.random.randint(jax.random.key(1), (8,), 0, cfg.vocab_size))
+    a = engine.submit(p[:4], max_new_tokens=1)
+    b = engine.submit(p, max_new_tokens=8)
+    c = engine.submit(p[:6], max_new_tokens=3)
+    out = engine.run()
+    assert out[a].shape == (5,) and out[b].shape == (16,) and out[c].shape == (9,)
+    # the 1-token request's output equals its greedy prefill continuation
+    ref = ServeEngine(model, params, cache_len=64).generate(p[None, :4], max_new_tokens=1)
+    np.testing.assert_array_equal(out[a], ref[0])
+
+
+@pytest.mark.slow
+def test_continuous_whisper_with_per_request_memory():
+    cfg, model, params = _setup("whisper-tiny")
+    prompts = np.zeros((2, 4), np.int32)
+    audio = 0.1 * np.asarray(
+        jax.random.normal(jax.random.key(2), (2, cfg.encoder_seq, cfg.d_model))
+    )
+    mem = jnp.asarray(audio, jnp.bfloat16)
+    ref = ServeEngine(model, params, cache_len=32).generate(
+        prompts, max_new_tokens=4, memory=mem
+    )
+    engine = ContinuousBatchingEngine(model, params, cache_len=32, max_slots=2)
+    ids = [
+        engine.submit(prompts[i], max_new_tokens=4, memory=mem[i : i + 1])
+        for i in range(2)
+    ]
+    out = engine.run()
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(out[rid], ref[i])

@@ -4,7 +4,7 @@ import sys
 import textwrap
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 _SCRIPT = textwrap.dedent(
     """

@@ -56,7 +56,9 @@ def test_dbsgd_schedule_through_trainer():
     assert max(log.batch_sizes) > min(log.batch_sizes)  # grew every epoch
 
 
-@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "arctic-480b"])
+@pytest.mark.parametrize(
+    "arch", ["rwkv6-1.6b", pytest.param("arctic-480b", marks=pytest.mark.slow)]
+)
 def test_trainer_on_nondense_families(arch):
     """SEBS applies unchanged to SSM and MoE families (DESIGN §Arch-applicability)."""
     sched = SEBS(b1=4, C1=16, rho=2.0, num_stages=2, eta=0.02)
