@@ -6,7 +6,9 @@ steps (deliverable b's "real" run; CPU-sized defaults keep it to ~1 h,
 
 Uses the production stack end to end: config → model (scan-over-layers,
 remat) → mSEBS (momentum + stage reset) → SEBSTrainer (accumulate mode) →
-checkpointing. Writes loss curves to examples/train_100m_log.json.
+fault-tolerant checkpointing (full state every ``--ckpt-every`` updates;
+rerun with ``--resume`` after an interruption to continue
+kill-equivalently). Writes loss curves to examples/train_100m_log.json.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -20,7 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.configs.base import BlockSpec, SegmentSpec
 from repro.core import SEBS, SEBSTrainer
@@ -55,6 +57,9 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--microbatch", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="examples/ckpt_100m")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in --ckpt-dir")
     args = ap.parse_args()
 
     cfg = make_cfg(args.preset)
@@ -76,13 +81,13 @@ def main():
     state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
 
     t0 = time.time()
-    state, log = trainer.run(state, log_every=5)
+    with CheckpointManager(args.ckpt_dir, keep_last=3) as ckpt:
+        state, log = trainer.run(state, log_every=5, checkpointer=ckpt,
+                                 save_every=args.ckpt_every, resume=args.resume)
     dt = time.time() - t0
     print(f"{log.steps[-1]} updates over {log.samples[-1]} samples in {dt:.0f}s "
           f"({dt / max(log.steps[-1], 1):.2f}s/update)")
     print(f"loss: {log.losses[0]:.3f} -> {np.mean(log.losses[-3:]):.3f}")
-    save_checkpoint(args.ckpt_dir, int(state.step), state.params,
-                    meta={"samples": log.samples[-1]})
     with open("examples/train_100m_log.json", "w") as f:
         json.dump(log.as_dict(), f, indent=1)
 

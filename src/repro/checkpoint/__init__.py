@@ -1,3 +1,8 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint", "latest_step"]

@@ -3,12 +3,28 @@
 Layout: ``<dir>/step_<N>/arrays.npz`` (flattened path-keyed leaves) and
 ``meta.json`` (step, schedule state, pipeline state). Restore rebuilds the
 tree onto the caller's target structure (and shardings, if given).
+
+Two layers:
+
+- :func:`save_checkpoint` / :func:`load_checkpoint` / :func:`latest_step` —
+  stateless one-shot primitives (synchronous, no retention).
+- :class:`CheckpointManager` — the production path used by
+  :meth:`repro.core.trainer.SEBSTrainer.run`: bounded retention
+  (``keep_last``), crash-atomic publication (write into a temp dir, then
+  ``os.rename`` — a kill mid-write leaves only an ignored ``.tmp`` dir, so
+  ``latest_step`` never sees a torn checkpoint), and an off-critical-path
+  writer thread. Device→host transfer happens synchronously inside
+  :meth:`CheckpointManager.save` (the train step donates its input buffers,
+  so leaves must be materialized before the next update runs); only the
+  disk I/O is deferred to the writer thread.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import shutil
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional
 
 import jax
@@ -35,19 +51,53 @@ def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
     return out, dtypes
 
 
+def _write(path: str, arrays: dict, meta: dict) -> str:
+    """Write into ``<path>.tmp`` then rename — readers never observe a
+    partially-written checkpoint, and a kill mid-write is harmless."""
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.isdir(path):
+        # re-saving an existing step: move the old dir aside before the
+        # rename, never delete-then-rename — a kill between those two ops
+        # must not lose the only copy of this step
+        old = path + ".old"
+        if os.path.isdir(old):
+            shutil.rmtree(old)
+        os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, path)
+    return path
+
+
 def save_checkpoint(directory: str, step: int, tree: Any, meta: Optional[dict] = None) -> str:
     path = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    os.makedirs(directory, exist_ok=True)
     arrays, dtypes = _flatten(tree)
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump({"step": step, "_dtypes": dtypes, **(meta or {})}, f)
-    return path
+    return _write(path, arrays, {"step": step, "_dtypes": dtypes, **(meta or {})})
+
+
+def _recover_interrupted_swaps(directory: str) -> None:
+    """A kill between _write's two renames can leave ``step_N.old`` with no
+    ``step_N``: the displaced checkpoint is complete, so put it back. Only
+    safe with no concurrent writer — CheckpointManager read paths wait()
+    first, and the CLI calls this before the run starts."""
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"(step_\d+)\.old", d)
+        if m and not os.path.isdir(os.path.join(directory, m.group(1))):
+            os.rename(os.path.join(directory, d), os.path.join(directory, m.group(1)))
 
 
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
+    _recover_interrupted_swaps(directory)
     steps = [
         int(m.group(1))
         for d in os.listdir(directory)
@@ -58,13 +108,13 @@ def latest_step(directory: str) -> Optional[int]:
 
 def load_checkpoint(directory: str, step: int, target: Any, shardings: Any = None):
     """Restore onto ``target``'s structure. Returns (tree, meta)."""
-    import ml_dtypes
-
     path = os.path.join(directory, f"step_{step:08d}")
     data = np.load(os.path.join(path, "arrays.npz"))
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     dtype_map = meta.pop("_dtypes", {})
+    if dtype_map:  # lazy: only bf16 leaves need the optional ml_dtypes dep
+        import ml_dtypes
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
     leaves = []
     shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
@@ -78,3 +128,99 @@ def load_checkpoint(directory: str, step: int, target: Any, shardings: Any = Non
             arr = jax.device_put(arr, sh)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+class CheckpointManager:
+    """Retention + async writes on top of the one-shot primitives.
+
+    ``save`` flattens the tree to host numpy *synchronously* (safe against
+    donated device buffers) and hands the disk write to a single background
+    thread, keeping serialization off the training critical path. ``wait``
+    drains pending writes and re-raises the first writer error. Retention
+    runs in the writer thread after each publication: all but the newest
+    ``keep_last`` ``step_*`` dirs are deleted.
+    """
+
+    def __init__(self, directory: str, keep_last: int = 3, async_write: bool = True):
+        assert keep_last >= 1
+        self.directory = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_write else None
+        self._pending: list[Future] = []
+
+    # -- write path ---------------------------------------------------------
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None) -> None:
+        arrays, dtypes = _flatten(tree)  # sync device→host snapshot
+        full_meta = {"step": step, "_dtypes": dtypes, **(meta or {})}
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        if self._pool is None:
+            self._write_and_retain(path, arrays, full_meta)
+        else:
+            # own the bytes before queueing: np.asarray of a CPU jax Array
+            # can alias the device buffer, which the next donate=True train
+            # step is free to overwrite while the writer thread serializes
+            arrays = {k: np.array(v, copy=True) for k, v in arrays.items()}
+            # backpressure: at most one write in flight — block on the
+            # previous one (re-raising its errors) so a slow disk can't
+            # queue unbounded full-model host copies
+            self.wait()
+            self._pending.append(self._pool.submit(self._write_and_retain, path, arrays, full_meta))
+
+    def _write_and_retain(self, path: str, arrays: dict, meta: dict) -> None:
+        _write(path, arrays, meta)
+        self._retain()
+
+    def _retain(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for d in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d+)", d))
+        )
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        """Block until all queued writes hit disk; re-raise writer errors."""
+        pending, self._pending = self._pending, []
+        for f in pending:
+            f.result()
+
+    def close(self) -> None:
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read path ----------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()  # recovery inside latest_step must not race the writer
+        return latest_step(self.directory)
+
+    def restore(self, target: Any, step: Optional[int] = None, shardings: Any = None):
+        """Restore checkpoint ``step`` (default: latest) onto ``target``.
+        Returns (tree, meta)."""
+        if step is not None:
+            self.wait()  # never read a checkpoint still being written
+            _recover_interrupted_swaps(self.directory)
+            return load_checkpoint(self.directory, step, target, shardings)
+        out = self.restore_latest(target, shardings)
+        if out is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        return out
+
+    def restore_latest(self, target: Any, shardings: Any = None):
+        """Like :meth:`restore` but returns ``None`` when the directory holds
+        no checkpoints yet (fresh start) instead of raising."""
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None
+        return load_checkpoint(self.directory, step, target, shardings)

@@ -71,6 +71,16 @@ class GradientNoiseScale:
             return float("nan")
         return self._tr_sigma / self._g_sq
 
+    # -- checkpointing (kill-equivalent resume) -----------------------------
+
+    def state(self) -> dict:
+        """JSON-able snapshot of the EMA accumulators."""
+        return {"tr_sigma": self._tr_sigma, "g_sq": self._g_sq}
+
+    def restore(self, state: dict) -> None:
+        self._tr_sigma = state["tr_sigma"]
+        self._g_sq = state["g_sq"]
+
 
 @dataclass
 class AdaptiveSEBS:
@@ -137,3 +147,24 @@ class AdaptiveSEBS:
             samples_begin=self._stage_begin,
             samples_end=self.total,
         )
+
+    # -- checkpointing (kill-equivalent resume) -----------------------------
+
+    def state(self) -> dict:
+        """JSON-able snapshot of everything :meth:`observe` mutates."""
+        return {
+            "batch": self._batch,
+            "stage": self._stage,
+            "stage_begin": self._stage_begin,
+            "anchor_loss": self._anchor_loss,
+            "ema_loss": self._ema_loss,
+            "history": list(self.history),
+        }
+
+    def restore(self, state: dict) -> None:
+        self._batch = int(state["batch"])
+        self._stage = int(state["stage"])
+        self._stage_begin = int(state["stage_begin"])
+        self._anchor_loss = state["anchor_loss"]
+        self._ema_loss = state["ema_loss"]
+        self.history = list(state["history"])

@@ -206,7 +206,18 @@ class SmithBatch:
         b = self.b1 * (self.rho if epoch >= self.grow_epoch else 1)
         decays = sum(1 for e in self.decay_epochs if epoch >= e)
         stage = (1 if epoch >= self.grow_epoch else 0) + decays
-        return StageInfo(stage, int(b), self.eta1 / self.rho**decays, 0, self.total_samples)
+        # real stage window (every (grow|decay) event opens a stage), not
+        # the whole-run [0, total) placeholder this used to return: stage
+        # equals the number of events at or before `epoch`, so the window
+        # is bounded by the events adjacent to that count. A grow and a
+        # decay on the same epoch advance the stage by 2; the duplicated
+        # event keeps the bounds list aligned (the skipped stage is empty).
+        # clamp: an event scheduled at/past total_epochs never fires inside
+        # the budget, but must not push a window past total_samples
+        events = sorted(min(e, self.total_epochs) for e in (self.grow_epoch, *self.decay_epochs))
+        bounds = [0] + [e * self.epoch_size for e in events] + [self.total_samples]
+        return StageInfo(stage, int(b), self.eta1 / self.rho**decays,
+                         bounds[stage], bounds[stage + 1])
 
 
 @dataclass(frozen=True)

@@ -66,9 +66,17 @@ class StageController:
             samples_after=samples_consumed + bs,
         )
 
-    def plans(self) -> Iterator[StepPlan]:
-        """Iterate update plans until the schedule's budget is exhausted."""
-        samples = 0
+    def plans(self, start_samples: int = 0) -> Iterator[StepPlan]:
+        """Iterate update plans until the schedule's budget is exhausted.
+
+        ``start_samples`` resumes the plan stream mid-run (checkpoint
+        restore): because :meth:`plan` is a pure function of the
+        consumed-sample count (plus, for stateful schedules, their restored
+        internal state), ``plans(k)`` is exactly the tail of ``plans(0)``
+        after the update that ends at ``k`` samples — the kill-equivalence
+        property the resume path relies on.
+        """
+        samples = start_samples
         while samples < self.schedule.total_samples:
             p = self.plan(samples)
             yield p

@@ -10,6 +10,15 @@ Also the reference implementation of the paper's headline accounting: it
 tracks (samples_consumed, parameter_updates) so experiments can plot loss
 against *computation* complexity and against *iteration* complexity
 (paper Fig. 3 left/right panels).
+
+Fault tolerance: :meth:`SEBSTrainer.run` takes a
+:class:`repro.checkpoint.CheckpointManager` and snapshots the FULL run
+state every ``save_every`` updates — params, optimizer state, step counter,
+host RNG, pipeline position, stateful-schedule internals (AdaptiveSEBS),
+the GradientNoiseScale EMA and the log so far. The contract is
+*kill-equivalence*: a run killed after any update and resumed from the
+latest checkpoint produces bit-identical losses, stage transitions and
+final params to an uninterrupted run (see tests/test_resume.py).
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.core.noise_scale import GradientNoiseScale
 from repro.core.schedules import Schedule
 from repro.core.stages import StageController, StepPlan
@@ -39,13 +49,20 @@ class TrainLog:
     noise_scales: List[float] = field(default_factory=list)
 
     def as_dict(self) -> Dict[str, list]:
+        # copies, not views: checkpoint meta is serialized by an async
+        # writer thread while the train loop keeps appending
         return {
-            "steps": self.steps,
-            "samples": self.samples,
-            "stages": self.stages,
-            "batch_sizes": self.batch_sizes,
-            "losses": self.losses,
+            "steps": list(self.steps),
+            "samples": list(self.samples),
+            "stages": list(self.stages),
+            "batch_sizes": list(self.batch_sizes),
+            "losses": list(self.losses),
+            "noise_scales": list(self.noise_scales),
         }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, list]) -> "TrainLog":
+        return cls(**{k: list(v) for k, v in d.items()})
 
 
 class SEBSTrainer:
@@ -61,6 +78,7 @@ class SEBSTrainer:
         mode: str = "accumulate",
         accum_mode: str = "deferred",
         grad_clip: float = 0.0,
+        seed: int = 0,
     ):
         self.model = model
         self.optimizer = optimizer
@@ -69,6 +87,11 @@ class SEBSTrainer:
         self.mesh = mesh
         self.accum_mode = accum_mode
         self.grad_clip = grad_clip
+        # Host-side RNG for any non-data stochastic decision (sampling-with-
+        # replacement datasets, stochastic eval triggers, ...). Data batches
+        # themselves are keyed by sample offset, NOT by this generator — but
+        # its state is checkpointed so consumers stay kill-equivalent too.
+        self.host_rng = np.random.default_rng(seed)
         self._steps: Dict[tuple, Callable] = {}
 
     def _step_fn(self, plan: StepPlan) -> Callable:
@@ -93,11 +116,79 @@ class SEBSTrainer:
             for k, v in batch.items()
         }
 
-    def run(self, state: TrainState, log_every: int = 10) -> tuple[TrainState, TrainLog]:
+    # -- checkpointing ------------------------------------------------------
+
+    def _save(self, ckpt: CheckpointManager, update: int, state: TrainState,
+              log: TrainLog, gns: GradientNoiseScale) -> None:
+        """Snapshot the full run state after optimizer update ``update``."""
+        meta = {
+            "update": update,
+            "pipeline": self.pipeline.state(),
+            "gns": gns.state(),
+            "host_rng": self.host_rng.bit_generator.state,
+            "log": log.as_dict(),
+        }
+        if hasattr(self.controller.schedule, "state"):
+            meta["schedule"] = self.controller.schedule.state()
+        ckpt.save(update, {"train_state": state}, meta=meta)
+
+    def _restore(self, ckpt: CheckpointManager, state: TrainState,
+                 log: TrainLog, gns: GradientNoiseScale):
+        """Restore the latest checkpoint, if any. Returns (state, update)."""
+        restored = ckpt.restore_latest({"train_state": state})
+        if restored is None:
+            return state, 0
+        tree, meta = restored
+        # put leaves back on device: the jitted step donates its state
+        # argument, which raw numpy views cannot satisfy
+        state = jax.tree.map(jnp.asarray, tree["train_state"])
+        self.pipeline.restore(meta["pipeline"])
+        gns.restore(meta["gns"])
+        self.host_rng.bit_generator.state = meta["host_rng"]
+        if meta.get("schedule") is not None and hasattr(self.controller.schedule, "restore"):
+            self.controller.schedule.restore(meta["schedule"])
+        saved_log = TrainLog.from_dict(meta["log"])
+        for f in ("steps", "samples", "stages", "batch_sizes", "losses", "noise_scales"):
+            getattr(log, f)[:] = getattr(saved_log, f)
+        return state, int(meta["update"])
+
+    # -- the training loop --------------------------------------------------
+
+    def run(
+        self,
+        state: TrainState,
+        log_every: int = 10,
+        *,
+        checkpointer: Optional[CheckpointManager] = None,
+        save_every: int = 0,
+        resume: bool = False,
+        stop_after_updates: Optional[int] = None,
+    ) -> tuple[TrainState, TrainLog]:
+        """Drive the schedule to its sample budget; returns (state, log).
+
+        ``checkpointer`` + ``save_every`` snapshot the full run state every
+        ``save_every`` optimizer updates (plus once at exit). ``resume``
+        restores from the checkpointer's latest checkpoint when one exists
+        (a fresh directory falls through to a cold start).
+        ``stop_after_updates`` exits the loop after that many updates —
+        the preemption hook the kill-equivalence tests and the CI resume
+        smoke job use to simulate a mid-run kill.
+        """
         log = TrainLog()
         gns = GradientNoiseScale()
         update = 0
-        for plan in self.controller.plans():
+        if resume and checkpointer is not None:
+            state, update = self._restore(checkpointer, state, log, gns)
+        interrupted = False
+        for plan in self.controller.plans(start_samples=self.pipeline.samples_consumed):
+            if stop_after_updates is not None and update >= stop_after_updates:
+                # checked BEFORE the update so a resume whose restored
+                # counter already meets the limit doesn't run one extra
+                # update; exit WITHOUT a farewell save — resume must replay
+                # from the last periodic checkpoint, exactly as after a
+                # real kill (simulated preemption)
+                interrupted = True
+                break
             batch = self.pipeline.next_batch(plan.batch_size)
             batch = self._shape_batch(batch, plan)
             step = self._step_fn(plan)
@@ -124,4 +215,10 @@ class SEBSTrainer:
                 log.batch_sizes.append(plan.batch_size)
                 log.losses.append(loss)
                 log.noise_scales.append(gns.b_noise)
+            if checkpointer is not None and save_every and update % save_every == 0:
+                self._save(checkpointer, update, state, log, gns)
+        if checkpointer is not None:
+            if not interrupted and update and (not save_every or update % save_every):
+                self._save(checkpointer, update, state, log, gns)  # final state
+            checkpointer.wait()
         return state, log

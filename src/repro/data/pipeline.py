@@ -4,9 +4,18 @@ The pipeline is indexed by *samples consumed*, not steps: the SEBS stage
 controller converts the consumed-sample count into the current stage's
 batch size, and the pipeline materializes exactly that many new samples
 as the next batch, placing them on the mesh with the batch axes sharded
-over (pod, data). Determinism: batch contents depend only on
-(seed, sample_offset), so a run is bit-reproducible across stage layouts
-and restarts.
+over (pod, data).
+
+Determinism contract: batch contents depend only on (seed, sample_offset).
+``next_batch`` asks the dataset for rows
+``samples_consumed .. samples_consumed + batch_size`` — it passes the
+SAMPLE OFFSET, never a batch counter, so any worker, batch-size schedule,
+stage layout, or checkpoint restart materializes identical sample rows.
+(Keying by batch index broke this silently: two runs that chunked the
+stream differently — e.g. an interrupted run resuming mid-stage — saw
+different data for the same sample range.) The whole pipeline state is
+therefore the single integer ``samples_consumed``, which
+:meth:`state`/:meth:`restore` round-trip through checkpoints.
 """
 from __future__ import annotations
 
@@ -26,11 +35,9 @@ class DataPipeline:
         self.ds = ds
         self.mesh = mesh
         self.samples_consumed = 0
-        self._batch_index = 0
 
     def next_batch(self, batch_size: int) -> dict:
-        batch = self.ds.batch(self._batch_index, batch_size)
-        self._batch_index += 1
+        batch = self.ds.batch(self.samples_consumed, batch_size)
         self.samples_consumed += batch_size
         if self.mesh is not None and not self.mesh.empty:
             sharding = NamedSharding(self.mesh, batch_spec(self.mesh, extra_dims=1))
@@ -38,11 +45,7 @@ class DataPipeline:
         return batch
 
     def state(self) -> dict:
-        return {
-            "samples_consumed": self.samples_consumed,
-            "batch_index": self._batch_index,
-        }
+        return {"samples_consumed": self.samples_consumed}
 
     def restore(self, state: dict) -> None:
         self.samples_consumed = int(state["samples_consumed"])
-        self._batch_index = int(state["batch_index"])

@@ -1,11 +1,14 @@
 """Deterministic synthetic datasets.
 
-- :class:`TokenDataset` — an infinite, index-addressable LM token stream
+- :class:`TokenDataset` — an infinite, offset-addressable LM token stream
   with a learnable structure (Zipf-distributed unigrams + a Markov kick) so
-  training losses actually *decrease*; batch ``i`` is a pure function of
-  ``(seed, i)``: any worker can materialize any batch without coordination,
-  which is what makes the SEBS dynamic-batch pipeline deterministic across
-  stage boundaries and across data-parallel shards.
+  training losses actually *decrease*. Sample row ``i`` is a pure function
+  of ``(seed, i)`` — NOT of any batch index — so ``batch(offset, b)``
+  materializes rows ``offset..offset+b`` identically on any worker, under
+  any batch partitioning, and across restarts. That per-sample keying is
+  what makes the SEBS dynamic-batch pipeline deterministic across stage
+  boundaries, data-parallel shards, and checkpoint resumes (the
+  kill-equivalence contract in core/trainer.py).
 - :class:`QuadraticProblem` — the paper's synthetic problem (Eq. 11):
   ``F(w) = (1/2n) Σ (w−ξᵢ)ᵀ D (w−ξᵢ)``, D = diag(1..d), ξᵢ ~ N(0, I),
   used to reproduce Fig. 2 (optimal batch size vs ‖w₁−w*‖).
@@ -26,19 +29,28 @@ class TokenDataset:
     seq_len: int
     seed: int = 0
 
-    def batch(self, index: int, batch_size: int) -> dict:
-        """Deterministic batch: tokens (B, S+1) int32 (inputs+shifted labels)."""
+    def sample(self, index) -> jnp.ndarray:
+        """Row ``index`` of the stream: (S+1,) int32, pure in (seed, index).
+
+        Zipf-ish marginal via squared uniform, plus a deterministic motif:
+        token_{t+1} depends on token_t for 25% of positions.
+        """
         key = jax.random.fold_in(jax.random.key(self.seed), index)
-        b, s = batch_size, self.seq_len + 1
-        # Zipf-ish marginal via squared uniform, plus a deterministic motif:
-        # token_{t+1} depends on token_t for 25% of positions.
-        u = jax.random.uniform(key, (b, s))
+        s = self.seq_len + 1
+        u = jax.random.uniform(key, (s,))
         base = (jnp.square(u) * self.vocab_size).astype(jnp.int32)
-        rolled = jnp.roll(base, 1, axis=1)
+        rolled = jnp.roll(base, 1)
         motif = (rolled * 31 + 7) % self.vocab_size
-        pick = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.25, (b, s))
-        tokens = jnp.where(pick, motif, base)
-        return {"tokens": tokens}
+        pick = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.25, (s,))
+        return jnp.where(pick, motif, base)
+
+    def batch(self, offset: int, batch_size: int) -> dict:
+        """Rows ``offset .. offset+batch_size``: tokens (B, S+1) int32
+        (inputs + shifted labels). Keyed by SAMPLE OFFSET, not batch index —
+        ``batch(0, 8)["tokens"][4:]`` equals ``batch(4, 4)["tokens"]``, so
+        every batch-size schedule / restart sees the same stream."""
+        idx = offset + jnp.arange(batch_size)
+        return {"tokens": jax.vmap(self.sample)(idx)}
 
 
 @dataclass(frozen=True)
@@ -129,7 +141,8 @@ class ImageClassDataset:
 
 
 def make_batch_iterator(ds: TokenDataset, batch_size: int, start: int = 0) -> Iterator[dict]:
+    """Yield consecutive batches; ``start`` is a sample offset."""
     i = start
     while True:
         yield ds.batch(i, batch_size)
-        i += 1
+        i += batch_size

@@ -7,17 +7,25 @@
 Smoke/CPU-sized by default; the full configs are exercised via
 launch/dryrun.py (this host has one device). On a real TPU slice the same
 entry point runs the production mesh (``--mesh single|multi``).
+
+Fault tolerance: ``--ckpt-dir`` + ``--ckpt-every N`` snapshot the FULL run
+state (params, optimizer state, step, host RNG, pipeline position,
+schedule state) every N updates; ``--resume`` restarts from the latest
+checkpoint in the directory and is kill-equivalent — the resumed run's
+losses and final params are bit-identical to an uninterrupted run.
+``--stop-after`` simulates a preemption for the CI resume smoke job.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import SEBS, ClassicalStagewise, SEBSTrainer
+from repro.core import SEBS, AdaptiveSEBS, ClassicalStagewise, SEBSTrainer
 from repro.data import DataPipeline, TokenDataset
 from repro.models import build_model
 from repro.optim import make_optimizer
@@ -31,7 +39,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--schedule", default="sebs", choices=["sebs", "classical"])
+    ap.add_argument("--schedule", default="sebs", choices=["sebs", "classical", "adaptive"])
     ap.add_argument("--optimizer", default="psgd")
     ap.add_argument("--gamma", type=float, default=1e4)
     ap.add_argument("--eta", type=float, default=0.3)
@@ -43,7 +51,19 @@ def main() -> None:
     ap.add_argument("--mode", default="accumulate", choices=["accumulate", "reshape"])
     ap.add_argument("--accum-mode", default="psum_each", choices=["psum_each", "deferred", "unrolled"])
     ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (full run state, not just params)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a checkpoint every N optimizer updates (0: only at exit)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain only the newest N checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir")
+    ap.add_argument("--stop-after", type=int, default=None,
+                    help="exit after N updates WITHOUT a final save "
+                         "(simulated preemption, used by the CI resume smoke job)")
+    ap.add_argument("--log-json", default=None,
+                    help="dump the train log (losses, stages, GNS trajectory) as JSON")
     ap.add_argument("--steps-log", type=int, default=5)
     args = ap.parse_args()
 
@@ -60,9 +80,12 @@ def main() -> None:
 
     if args.schedule == "sebs":
         schedule = SEBS(b1=args.b1, C1=args.c1, rho=args.rho, num_stages=args.stages, eta=args.eta)
-    else:
+    elif args.schedule == "classical":
         schedule = ClassicalStagewise(b=args.b1, C1=args.c1, rho=args.rho,
                                       num_stages=args.stages, eta1=args.eta)
+    else:
+        schedule = AdaptiveSEBS(b1=args.b1, eta=args.eta, rho_max=args.rho,
+                                total=args.c1 * args.stages)
 
     ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
     trainer = SEBSTrainer(
@@ -71,15 +94,33 @@ def main() -> None:
     )
     params, _ = model.init(jax.random.key(0))
     state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
-    state, tlog = trainer.run(state, log_every=args.steps_log)
+
+    checkpointer = None
+    if args.ckpt_dir:
+        checkpointer = CheckpointManager(args.ckpt_dir, keep_last=args.ckpt_keep)
+    if args.resume and checkpointer is None:
+        ap.error("--resume requires --ckpt-dir")
+
+    state, tlog = trainer.run(
+        state,
+        log_every=args.steps_log,
+        checkpointer=checkpointer,
+        save_every=args.ckpt_every,
+        resume=args.resume,
+        stop_after_updates=args.stop_after,
+    )
     for i in range(len(tlog.steps)):
         log.info("update %4d samples %6d stage %d batch %4d loss %.4f",
                  tlog.steps[i], tlog.samples[i], tlog.stages[i],
                  tlog.batch_sizes[i], tlog.losses[i])
-    if args.ckpt_dir:
-        path = save_checkpoint(args.ckpt_dir, int(state.step), state.params,
-                               meta={"samples": tlog.samples[-1]})
-        log.info("checkpoint written to %s", path)
+    if checkpointer is not None:
+        checkpointer.close()
+        log.info("checkpoints under %s (latest: update %s)",
+                 args.ckpt_dir, checkpointer.latest_step())
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(tlog.as_dict(), f)
+        log.info("train log written to %s", args.log_json)
 
 
 if __name__ == "__main__":

@@ -49,6 +49,12 @@ class Request:
 
     @property
     def latency(self) -> float:
+        """Submit→finish wall time. NaN until the request is DONE — a
+        queued/running request has ``t_finish == 0.0`` and the raw
+        difference would be a large negative number that silently poisons
+        any latency average."""
+        if self.state != DONE:
+            return float("nan")
         return self.t_finish - self.t_submit
 
     def tokens(self) -> np.ndarray:

@@ -1,10 +1,13 @@
 """Data pipeline determinism and checkpoint round-trips."""
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint import CheckpointManager, latest_step, load_checkpoint, save_checkpoint
 from repro.data import DataPipeline, QuadraticProblem, TokenDataset
 
 
@@ -17,6 +20,36 @@ def test_token_batches_deterministic_and_index_addressable():
     assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
     assert b1["tokens"].shape == (8, 33)  # seq_len + 1 for labels
     assert int(b1["tokens"].max()) < 1000
+
+
+def test_token_batches_keyed_by_sample_offset_not_batch_index():
+    """Row i is a pure function of (seed, i): any chunking of the stream
+    materializes identical sample rows (the determinism the batch-growth
+    schedules rely on for comparable-computation experiments)."""
+    ds = TokenDataset(vocab_size=1000, seq_len=16, seed=3)
+    whole = np.asarray(ds.batch(0, 12)["tokens"])
+    np.testing.assert_array_equal(whole[4:8], np.asarray(ds.batch(4, 4)["tokens"]))
+    chunked = np.concatenate(
+        [np.asarray(ds.batch(0, 5)["tokens"]), np.asarray(ds.batch(5, 7)["tokens"])]
+    )
+    np.testing.assert_array_equal(whole, chunked)
+    row9 = np.asarray(ds.sample(9))
+    np.testing.assert_array_equal(whole[9], row9)
+
+
+def test_pipeline_partitioning_invariance():
+    """Two pipelines chunking the stream differently (e.g. pre-kill vs
+    resumed batch boundaries) must consume identical sample rows."""
+    ds = TokenDataset(vocab_size=100, seq_len=8, seed=0)
+    p, q = DataPipeline(ds), DataPipeline(ds)
+    a = np.concatenate(
+        [np.asarray(p.next_batch(4)["tokens"]), np.asarray(p.next_batch(8)["tokens"])]
+    )
+    b = np.concatenate(
+        [np.asarray(q.next_batch(6)["tokens"]), np.asarray(q.next_batch(6)["tokens"])]
+    )
+    np.testing.assert_array_equal(a, b)
+    assert p.samples_consumed == q.samples_consumed == 12
 
 
 def test_pipeline_counts_samples_and_restores():
@@ -59,3 +92,84 @@ def test_checkpoint_roundtrip(tmp_path):
     assert meta["samples"] == 1234
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_roundtrip_optimizer_state_bitexact(tmp_path):
+    """Full-train-state shaped tree: bf16 params + param-mirroring optimizer
+    slots + scalar counters, all bit-exact through the npz round-trip."""
+    from repro.optim import make_optimizer
+    from repro.train.state import TrainState
+
+    params = {
+        "wte": jnp.linspace(-1, 1, 12, dtype=jnp.bfloat16).reshape(3, 4),
+        "blocks": [{"w": jnp.arange(4.0)}, {"w": jnp.arange(4.0) * -0.5}],
+    }
+    opt = make_optimizer("momentum", beta=0.9)
+    state = TrainState(params, opt.init(params), jnp.int32(41))
+    save_checkpoint(str(tmp_path), 41, {"train_state": state})
+    restored, _ = load_checkpoint(str(tmp_path), 41, {"train_state": state})
+    ref, got = jax.tree.leaves(state), jax.tree.leaves(restored["train_state"])
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_load_checkpoint_without_ml_dtypes_when_no_bf16(tmp_path, monkeypatch):
+    """The ml_dtypes import must be lazy: a checkpoint with no bf16 leaves
+    restores in environments without the optional dep."""
+    tree = {"w": jnp.arange(4.0), "n": jnp.int32(3)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    monkeypatch.setitem(sys.modules, "ml_dtypes", None)  # import -> ImportError
+    restored, _ = load_checkpoint(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(4.0))
+    bf16 = {"b": jnp.ones(2, jnp.bfloat16)}
+    save_checkpoint(str(tmp_path), 2, bf16)
+    with pytest.raises(ImportError):
+        load_checkpoint(str(tmp_path), 2, bf16)
+
+
+def test_checkpoint_manager_retention_and_async(tmp_path):
+    tree = {"w": jnp.arange(3.0)}
+    with CheckpointManager(str(tmp_path), keep_last=2) as mgr:
+        for step in (1, 2, 3, 4):
+            mgr.save(step, tree, meta={"update": step})
+        mgr.wait()
+        assert mgr.latest_step() == 4
+        dirs = sorted(d for d in os.listdir(str(tmp_path)) if d.startswith("step_"))
+        assert dirs == ["step_00000003", "step_00000004"]  # keep_last=2
+        restored = mgr.restore_latest(tree)
+        assert restored is not None and restored[1]["update"] == 4
+
+
+def test_checkpoint_manager_ignores_torn_writes(tmp_path):
+    """A kill mid-write leaves only a ``.tmp`` dir, which readers ignore."""
+    tree = {"w": jnp.arange(3.0)}
+    with CheckpointManager(str(tmp_path), keep_last=3) as mgr:
+        mgr.save(5, tree)
+        mgr.wait()
+        torn = tmp_path / "step_00000009.tmp"
+        torn.mkdir()
+        (torn / "arrays.npz").write_bytes(b"partial garbage")
+        assert mgr.latest_step() == 5  # torn write invisible
+        _, meta = mgr.restore(tree)
+        assert meta["step"] == 5
+
+
+def test_checkpoint_recovers_checkpoint_displaced_by_killed_swap(tmp_path):
+    """A kill between the re-save swap's two renames leaves ``step_N.old``
+    with no ``step_N``; readers must put the displaced checkpoint back."""
+    tree = {"w": jnp.arange(3.0)}
+    save_checkpoint(str(tmp_path), 7, tree, meta={"update": 7})
+    os.rename(tmp_path / "step_00000007", tmp_path / "step_00000007.old")
+    assert latest_step(str(tmp_path)) == 7  # self-healed
+    restored, meta = load_checkpoint(str(tmp_path), 7, tree)
+    assert meta["update"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(3.0))
+
+
+def test_checkpoint_manager_restore_latest_empty_dir(tmp_path):
+    with CheckpointManager(str(tmp_path / "fresh")) as mgr:
+        assert mgr.restore_latest({"w": jnp.zeros(1)}) is None
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({"w": jnp.zeros(1)})

@@ -1,0 +1,199 @@
+"""Fault tolerance: full-state checkpoint/resume with the kill-equivalence
+guarantee — a run killed after update k and resumed from its latest
+checkpoint produces bit-identical losses, stages and final params to an
+uninterrupted run (accumulate mode, stateless SEBS and stateful
+AdaptiveSEBS schedules)."""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import SEBS, AdaptiveSEBS, GradientNoiseScale, SEBSTrainer
+from repro.core.stages import StageController
+from repro.data import DataPipeline, TokenDataset
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+
+ARCH = "qwen2.5-3b"
+
+
+def _sebs_schedule():
+    # budgets 24/48, batches 4/8 -> 6 + 6 = 12 optimizer updates
+    return SEBS(b1=4, C1=24, rho=2.0, num_stages=2, eta=0.05)
+
+
+class _EchoDataset:
+    """Trivially learnable stream (every position repeats the row's start
+    token), keyed by sample offset: CE collapses fast, so AdaptiveSEBS's
+    contraction trigger fires deterministically within a short run."""
+
+    def __init__(self, vocab_size, seq_len, seed=0):
+        self.vocab_size, self.seq_len, self.seed = vocab_size, seq_len, seed
+
+    def batch(self, offset, batch_size):
+        idx = offset + jnp.arange(batch_size)
+        start = jax.vmap(
+            lambda i: jax.random.randint(
+                jax.random.fold_in(jax.random.key(self.seed), i), (1,), 0, self.vocab_size
+            )
+        )(idx)
+        return {"tokens": jnp.broadcast_to(start, (batch_size, self.seq_len + 1))}
+
+
+def _adaptive_schedule():
+    return AdaptiveSEBS(b1=4, eta=0.02, total=320, rho_max=4.0,
+                        min_stage_samples=64, smooth=0.5)
+
+
+def _trainer(schedule, dataset_cls=TokenDataset):
+    cfg = get_config(ARCH, "smoke")
+    model = build_model(cfg)
+    optimizer = make_optimizer("momentum", beta=0.9)
+    ds = dataset_cls(vocab_size=cfg.vocab_size, seq_len=8, seed=0)
+    trainer = SEBSTrainer(
+        model, optimizer, schedule, DataPipeline(ds),
+        mesh=None, microbatch=4, mode="accumulate", accum_mode="psum_each",
+        grad_clip=1.0,
+    )
+    params, _ = model.init(jax.random.key(0))
+    return trainer, TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def _param_bytes(state):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(state.params)]
+
+
+_REF_CACHE = {}
+
+
+def _reference_run(make_schedule):
+    """Uninterrupted run (computed once per schedule family)."""
+    if make_schedule not in _REF_CACHE:
+        trainer, state = _trainer(
+            make_schedule(),
+            _EchoDataset if make_schedule is _adaptive_schedule else TokenDataset,
+        )
+        state, log = trainer.run(state, log_every=1)
+        _REF_CACHE[make_schedule] = (_param_bytes(state), log)
+    return _REF_CACHE[make_schedule]
+
+
+def _kill_and_resume(make_schedule, k, tmp_path, save_every=2):
+    """Train with periodic checkpoints, kill after update k (no farewell
+    save), then resume in a FRESH trainer (fresh jit cache, fresh pipeline,
+    fresh schedule instance) from whatever checkpoint survived."""
+    ds_cls = _EchoDataset if make_schedule is _adaptive_schedule else TokenDataset
+    ckpt_dir = str(tmp_path / f"ckpt_k{k}")
+
+    trainer, state = _trainer(make_schedule(), ds_cls)
+    with CheckpointManager(ckpt_dir, keep_last=2) as ckpt:
+        trainer.run(state, log_every=1, checkpointer=ckpt, save_every=save_every,
+                    stop_after_updates=k)
+
+    trainer2, state2 = _trainer(make_schedule(), ds_cls)
+    with CheckpointManager(ckpt_dir, keep_last=2) as ckpt2:
+        final, log = trainer2.run(state2, log_every=1, checkpointer=ckpt2,
+                                  save_every=save_every, resume=True)
+    return _param_bytes(final), log
+
+
+@given(k=st.integers(1, 11))
+@settings(max_examples=3, deadline=None)
+def test_kill_equivalence_sebs(k):
+    """Property: for any kill point k, resume reproduces the uninterrupted
+    run bit-for-bit — losses, stage trajectory, final params."""
+    ref_params, ref_log = _reference_run(_sebs_schedule)
+    with tempfile.TemporaryDirectory() as td:
+        params, log = _kill_and_resume(_sebs_schedule, k, Path(td))
+    assert log.losses == ref_log.losses  # float equality IS the contract
+    assert log.stages == ref_log.stages
+    assert log.batch_sizes == ref_log.batch_sizes
+    assert params == ref_params
+
+
+def test_kill_equivalence_adaptive_sebs(tmp_path):
+    """Stateful schedule: AdaptiveSEBS's EMA/anchor/stage internals are
+    checkpointed, so a resumed run takes identical stage transitions."""
+    ref_params, ref_log = _reference_run(_adaptive_schedule)
+    assert max(ref_log.batch_sizes) > 4  # the schedule actually grew
+    # kill late enough that the surviving checkpoint carries non-trivial
+    # adaptive state (EMA + anchor, usually a grown batch)
+    params, log = _kill_and_resume(_adaptive_schedule, 20, tmp_path, save_every=3)
+    assert log.losses == ref_log.losses
+    assert log.stages == ref_log.stages
+    assert log.batch_sizes == ref_log.batch_sizes
+    assert params == ref_params
+
+
+def test_resume_with_empty_dir_is_cold_start(tmp_path):
+    """--resume against a fresh directory must fall through to update 0."""
+    sched = _sebs_schedule()
+    trainer, state = _trainer(sched)
+    ref_params, ref_log = _reference_run(_sebs_schedule)
+    with CheckpointManager(str(tmp_path / "empty")) as ckpt:
+        final, log = trainer.run(state, log_every=1, checkpointer=ckpt, resume=True)
+    assert log.losses == ref_log.losses
+    assert _param_bytes(final) == ref_params
+    assert ckpt.latest_step() == 12  # completed run leaves a final checkpoint
+
+
+def test_resume_past_stop_limit_runs_no_extra_update(tmp_path):
+    """A resume whose restored update counter already meets stop_after must
+    exit before executing (or checkpointing) anything further."""
+    ckpt_dir = str(tmp_path / "ck")
+    trainer, state = _trainer(_sebs_schedule())
+    with CheckpointManager(ckpt_dir) as ckpt:
+        trainer.run(state, log_every=1, checkpointer=ckpt, save_every=2,
+                    stop_after_updates=5)  # checkpoints at 2, 4
+    trainer2, state2 = _trainer(_sebs_schedule())
+    with CheckpointManager(ckpt_dir) as ckpt2:
+        _, log = trainer2.run(state2, log_every=1, checkpointer=ckpt2,
+                              save_every=2, resume=True, stop_after_updates=3)
+        assert ckpt2.latest_step() == 4  # nothing new written
+    assert log.steps[-1] == 4  # restored log, no update executed past it
+    assert trainer2.pipeline.samples_consumed == 16  # 4 updates * b=4
+
+
+def test_controller_plans_resume_is_tail_of_full_stream():
+    """plans(start_samples=k) must equal the tail of plans(0) — the pure-
+    function property the resume path relies on, including mid-stage."""
+    sched = SEBS(b1=4, C1=40, rho=2.0, num_stages=3, eta=0.1)
+    ctl = StageController(sched, microbatch=4, mode="accumulate")
+    full = list(ctl.plans())
+    for i in range(len(full)):
+        start = full[i - 1].samples_after if i else 0
+        assert list(ctl.plans(start_samples=start)) == full[i:]
+
+
+def test_gns_state_roundtrip():
+    gns = GradientNoiseScale(ema=0.7)
+    gns.update(12.0, 4.0, b_small=2, b_big=16)
+    gns.update(10.0, 3.0, b_small=2, b_big=16)
+    clone = GradientNoiseScale(ema=0.7)
+    clone.restore(gns.state())
+    assert clone.b_noise == gns.b_noise
+    gns.update(11.0, 3.5, b_small=2, b_big=16)
+    clone.update(11.0, 3.5, b_small=2, b_big=16)
+    assert clone.b_noise == gns.b_noise  # identical continuation
+
+
+def test_adaptive_sebs_state_roundtrip():
+    sched = AdaptiveSEBS(b1=8, eta=0.1, total=10_000, rho_max=4.0,
+                         min_stage_samples=100, smooth=0.0)
+    sched.observe(50, 1.0)
+    sched.observe(150, 0.2)  # contraction -> stage 1
+    clone = AdaptiveSEBS(b1=8, eta=0.1, total=10_000, rho_max=4.0,
+                         min_stage_samples=100, smooth=0.0)
+    clone.restore(sched.state())
+    assert clone.info(150) == sched.info(150)
+    assert clone.history == sched.history
+    sched.observe(400, 0.04)
+    clone.observe(400, 0.04)
+    assert clone.info(400) == sched.info(400)  # identical continuation

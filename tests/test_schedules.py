@@ -4,7 +4,14 @@ import math
 import pytest
 from _propcheck import given, settings, strategies as st
 
-from repro.core.schedules import SEBS, ClassicalStagewise, DBSGD, EpochStagewise
+from repro.core.schedules import (
+    SEBS,
+    ClassicalStagewise,
+    DBSGD,
+    EpochStagewise,
+    SmithBatch,
+    WarmupConstant,
+)
 from repro.core.stages import StageController
 
 
@@ -121,6 +128,61 @@ def test_dbsgd_grows_every_epoch():
     assert d.info(0).batch_size == 100
     assert d.info(1000).batch_size == 102
     assert d.info(4000).batch_size == int(round(100 * 1.02**4))
+
+
+def test_smith_batch_reports_real_stage_windows():
+    """Regression: SmithBatch.info used to return (0, total) for EVERY
+    stage. Each grow/decay event opens a stage with its own window."""
+    s = SmithBatch(b1=8, eta1=0.4, rho=4.0, epoch_size=100, grow_epoch=2,
+                   decay_epochs=(4, 6), total_epochs=8)
+    i0 = s.info(50)
+    assert (i0.stage, i0.batch_size, i0.samples_begin, i0.samples_end) == (0, 8, 0, 200)
+    i1 = s.info(250)  # grew at epoch 2
+    assert (i1.stage, i1.batch_size, i1.samples_begin, i1.samples_end) == (1, 32, 200, 400)
+    assert i1.lr == 0.4
+    i2 = s.info(450)  # first decay
+    assert (i2.stage, i2.samples_begin, i2.samples_end) == (2, 400, 600)
+    assert i2.lr == pytest.approx(0.1)
+    i3 = s.info(750)  # second decay; last window closes at the total budget
+    assert (i3.stage, i3.samples_begin, i3.samples_end) == (3, 600, 800)
+    assert i3.lr == pytest.approx(0.025)
+
+
+_WINDOW_SCHEDULES = [
+    SEBS(b1=8, C1=100, rho=2.0, num_stages=4, eta=0.1),
+    ClassicalStagewise(b=8, C1=100, rho=2.0, num_stages=4, eta1=0.1),
+    EpochStagewise(b1=8, eta1=0.1, rho=2.0, epoch_size=64,
+                   boundaries_epochs=(2, 5), total_epochs=8, mode="sebs"),
+    EpochStagewise(b1=8, eta1=0.1, rho=2.0, epoch_size=64,
+                   boundaries_epochs=(2, 5), total_epochs=8, mode="classical"),
+    DBSGD(b1=8, eta=0.1, epoch_size=50, total_epochs=6, scale=1.5),
+    SmithBatch(b1=8, eta1=0.4, rho=4.0, epoch_size=100, grow_epoch=2,
+               decay_epochs=(4, 6), total_epochs=8),
+    SmithBatch(b1=8, eta1=0.4, rho=4.0, epoch_size=100, grow_epoch=4,
+               decay_epochs=(4, 6), total_epochs=8),  # grow+decay same epoch
+    SmithBatch(b1=8, eta1=0.4, rho=4.0, epoch_size=100, grow_epoch=2,
+               decay_epochs=(4, 6), total_epochs=5),  # decay past the budget
+    WarmupConstant(b=8, eta=0.1, warmup_samples=64, total=512),
+]
+
+
+@pytest.mark.parametrize("sched", _WINDOW_SCHEDULES, ids=lambda s: type(s).__name__)
+def test_stage_window_invariants(sched):
+    """For every in-budget sample count: the reported window contains the
+    query point, lies inside the budget, and the stage index is
+    non-decreasing in samples (window invariants across ALL schedules)."""
+    total = sched.total_samples
+    prev_stage = 0
+    for samples in range(0, total, max(1, total // 197)):
+        info = sched.info(samples)
+        assert 0 <= info.samples_begin <= samples < info.samples_end <= total, (
+            samples, info)
+        assert info.batch_size >= 1 and info.lr > 0
+        assert info.stage >= prev_stage
+        prev_stage = info.stage
+    # the final sample of the budget still falls in the last stage's window
+    last = sched.info(total - 1)
+    assert last.samples_end == total
 
 
 def test_epoch_stagewise_matches_paper_cifar_setup():

@@ -212,3 +212,20 @@ def test_continuous_whisper_with_per_request_memory():
     out = engine.run()
     for i, rid in enumerate(ids):
         np.testing.assert_array_equal(out[rid], ref[i])
+
+
+def test_request_latency_guarded_until_done():
+    """Regression: latency was t_finish - t_submit even for QUEUED/RUNNING
+    requests (t_finish == 0.0) — a huge negative number that would silently
+    poison any averaged latency metric. It must be NaN until DONE."""
+    from repro.serve.scheduler import DONE, RequestScheduler
+
+    sched = RequestScheduler()
+    rid = sched.submit(np.array([1, 2, 3]), max_new_tokens=2)
+    req = sched.requests[rid]
+    assert np.isnan(req.latency)  # queued
+    req.state = "running"
+    assert np.isnan(req.latency)  # running
+    req.state = DONE
+    req.t_finish = req.t_submit + 0.125
+    assert req.latency == pytest.approx(0.125)
