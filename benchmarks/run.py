@@ -12,7 +12,8 @@ import time
 import traceback
 
 from benchmarks import adaptive_sebs, fig1_util, fig2_optimal_batch, fig3_stagewise
-from benchmarks import kernel_bench, roofline_report, serve_throughput, table1_updates
+from benchmarks import kernel_bench, roofline_report, serve_prefix, serve_throughput
+from benchmarks import table1_updates
 
 MODULES = {
     "fig1": fig1_util,
@@ -23,6 +24,7 @@ MODULES = {
     "roofline": roofline_report,
     "adaptive": adaptive_sebs,
     "serve": serve_throughput,
+    "serve_prefix": serve_prefix,
 }
 
 

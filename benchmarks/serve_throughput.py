@@ -45,8 +45,18 @@ def _prompts(cfg, n: int, key: int = 1) -> np.ndarray:
     )
 
 
+PERCENTILE_METHOD = "nearest-rank"  # p_q = sorted(x)[ceil(q/100 * n) - 1]
+
+
 def _pct(lat, q):
-    return float(np.percentile(np.asarray(lat), q))
+    """Nearest-rank percentile: the smallest observed value with at least
+    q% of samples at or below it — always an actual measurement (np's
+    default linear interpolation invents latencies between samples, and at
+    small n its p99 understates the true worst tail)."""
+    xs = np.sort(np.asarray(lat, dtype=np.float64))
+    assert xs.size > 0
+    rank = int(np.ceil(q / 100.0 * xs.size))
+    return float(xs[max(rank, 1) - 1])
 
 
 def _bench_static(model, params, prompts) -> tuple[float, list]:
@@ -97,20 +107,41 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
     rows = []
+    details = {"percentile_method": PERCENTILE_METHOD, "results": []}
     for load in LOADS:
         prompts = _prompts(cfg, load)
         total_tokens = load * NEW_TOKENS
         for name, bench in (("static", _bench_static), ("continuous", _bench_continuous)):
             elapsed, lat = bench(model, params, prompts)
             tps = total_tokens / elapsed
+            p50, p99 = _pct(lat, 50), _pct(lat, 99)
+            details["results"].append(
+                {
+                    "engine": name,
+                    "load": load,
+                    "tok_per_s": tps,
+                    "latency_p50_s": p50,
+                    "latency_p99_s": p99,
+                }
+            )
             rows.append(
                 (
                     f"serve_{name}_load{load}",
                     round(elapsed / total_tokens * 1e6, 1),
-                    f"{tps:.1f} tok/s p50={_pct(lat, 50) * 1e3:.0f}ms p99={_pct(lat, 99) * 1e3:.0f}ms",
+                    f"{tps:.1f} tok/s p50={p50 * 1e3:.0f}ms p99={p99 * 1e3:.0f}ms",
                 )
             )
+    _dump(details, out_dir, "serve_throughput.json")
     return rows
+
+
+def _dump(obj, out_dir: str, name: str) -> None:
+    import json
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(obj, f, indent=2)
 
 
 def main() -> None:

@@ -6,6 +6,10 @@
     # continuous batching with a stagewise admission ramp
     PYTHONPATH=src python -m repro.launch.serve --engine continuous \
         --requests 12 --slots 8 --b1 2 --rho 2.0
+
+    # paged KV cache + radix prefix sharing + chunked prefill
+    PYTHONPATH=src python -m repro.launch.serve --engine paged \
+        --requests 12 --slots 4 --page-size 16 --chunk 32 --prefix-cache
 """
 from __future__ import annotations
 
@@ -16,7 +20,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ContinuousBatchingEngine, ServeEngine
+from repro.serve import (
+    ContinuousBatchingEngine,
+    PagedContinuousBatchingEngine,
+    ServeEngine,
+)
 from repro.utils.log import get_logger
 
 log = get_logger("serve")
@@ -26,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--variant", default="smoke")
-    ap.add_argument("--engine", choices=["static", "continuous"], default="static")
+    ap.add_argument("--engine", choices=["static", "continuous", "paged"], default="static")
     ap.add_argument("--batch", type=int, default=4, help="static: batch size")
     ap.add_argument("--requests", type=int, default=8, help="continuous: request count")
     ap.add_argument("--slots", type=int, default=4, help="continuous: max slot-ring width")
@@ -40,6 +48,17 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged: pool size in pages (default: dense-equivalent)")
+    ap.add_argument("--chunk", type=int, action="append", default=None,
+                    help="paged: prefill chunk size (repeatable for multiple buckets)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache", action="store_true",
+                    default=True, help="paged: share prompt-prefix pages (default)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="paged: give all requests a common prompt prefix of this length")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -57,13 +76,25 @@ def main() -> None:
                      row[args.prompt_len:].tolist())
         return
 
-    engine = ContinuousBatchingEngine(
-        model, params, cache_len=args.cache_len, max_slots=args.slots,
-        b1=args.b1, rho=args.rho, patience=args.patience,
-    )
+    if args.engine == "paged":
+        engine = PagedContinuousBatchingEngine(
+            model, params, cache_len=args.cache_len, max_slots=args.slots,
+            b1=args.b1, rho=args.rho, patience=args.patience,
+            page_size=args.page_size, num_pages=args.pages,
+            prefix_cache=args.prefix_cache,
+            prefill_chunks=tuple(args.chunk) if args.chunk else (32,),
+        )
+    else:
+        engine = ContinuousBatchingEngine(
+            model, params, cache_len=args.cache_len, max_slots=args.slots,
+            b1=args.b1, rho=args.rho, patience=args.patience,
+        )
     prompts = np.asarray(
         jax.random.randint(jax.random.key(1), (args.requests, args.prompt_len), 0, cfg.vocab_size)
     )
+    if args.shared_prefix:
+        prompts = prompts.copy()
+        prompts[:, : args.shared_prefix] = prompts[0, : args.shared_prefix]
     ids = [
         engine.submit(p, max_new_tokens=args.new_tokens,
                       temperature=args.temperature, top_k=args.top_k)
@@ -79,6 +110,18 @@ def main() -> None:
         engine.admission.ladder, engine.stats["peak_width"], engine.stats["ticks"],
         engine.stats["decoded_tokens"], engine.decode_compiles,
     )
+    if args.engine == "paged":
+        mem = engine.memory_stats()
+        log.info(
+            "pages peak %d/%d | prefix hit-rate %.0f%% | prefill computed %d "
+            "(%d reused) | %d chunk step(s) compiled | kv peak %d KiB "
+            "(dense-equiv %d KiB)",
+            mem["pages_peak"], mem["pages_capacity"],
+            100 * mem["prefix_hit_rate"],
+            engine.stats["prefill_tokens_computed"],
+            engine.stats["prefix_tokens_reused"], engine.prefill_compiles,
+            mem["kv_bytes_peak"] // 1024, mem["kv_bytes_dense_equiv"] // 1024,
+        )
 
 
 if __name__ == "__main__":

@@ -84,6 +84,24 @@ def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, cache_len: i
     return cache
 
 
+def init_block_cache_paged(
+    cfg: ModelConfig, spec: BlockSpec, num_pages: int, page_size: int,
+    state_batch: int, dtype,
+):
+    """Paged layout: attention KV lives in the shared page pool
+    ((num_pages, page_size, ...) leaves, one page id spanning every layer);
+    O(1) recurrent state (SSM/conv/RWKV) stays per-slot dense at
+    ``state_batch`` rows."""
+    cache = {}
+    if spec.mixer in ("attn", "swa", "cross_attn_block"):
+        cache["attn"] = attention.init_paged_cache(cfg, num_pages, page_size, dtype)
+    elif spec.mixer == "mamba2":
+        cache["mamba"] = mamba2.init_cache(cfg, state_batch, dtype)
+    elif spec.mixer == "rwkv6":
+        cache["rwkv"] = rwkv6.init_cache(cfg, state_batch, dtype)
+    return cache
+
+
 def block_cache_axes(spec: BlockSpec):
     axes = {}
     if spec.mixer in ("attn", "swa", "cross_attn_block"):
@@ -106,6 +124,7 @@ def apply_block(
     cache_index=None,
     memory=None,
     causal: bool = True,
+    page_table=None,
 ):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -121,7 +140,7 @@ def apply_block(
             params["attn"], h, cfg,
             positions=positions, causal=causal, sliding_window=window,
             cache=None if cache is None else cache.get("attn"),
-            cache_index=cache_index,
+            cache_index=cache_index, page_table=page_table,
         )
         if new_cache is not None and attn_cache is not None:
             new_cache["attn"] = attn_cache
@@ -226,6 +245,21 @@ def init_segment_cache(cfg: ModelConfig, seg: SegmentSpec, batch: int, cache_len
     return cache
 
 
+def init_segment_cache_paged(
+    cfg: ModelConfig, seg: SegmentSpec, num_pages: int, page_size: int,
+    state_batch: int, dtype,
+):
+    cache = {}
+    for bi, spec in enumerate(seg.body):
+        c = init_block_cache_paged(cfg, spec, num_pages, page_size, state_batch, dtype)
+        if c:
+            cache[f"b{bi}"] = tree_stack([c] * seg.repeat)
+    if seg.shared_attn:
+        c = init_block_cache_paged(cfg, SHARED_SPEC, num_pages, page_size, state_batch, dtype)
+        cache["shared"] = tree_stack([c] * seg.repeat)
+    return cache
+
+
 def segment_cache_axes(seg: SegmentSpec):
     axes = {}
 
@@ -256,6 +290,7 @@ def apply_segment(
     cache_index=None,
     memory=None,
     causal: bool = True,
+    page_table=None,
 ):
     """Scan the segment body over the repeat axis. Returns (x, new_cache, aux)."""
     shared = params.get("shared")
@@ -272,6 +307,7 @@ def apply_segment(
                 shared, h, cfg, SHARED_SPEC, positions=positions,
                 cache=None if layer_cache is None else layer_cache.get("shared"),
                 cache_index=cache_index, memory=memory, causal=causal,
+                page_table=page_table,
             )
             h, aux = y, aux + a
             if new_layer_cache is not None and c is not None:
@@ -281,6 +317,7 @@ def apply_segment(
                 layer_params[f"b{bi}"], h, cfg, spec, positions=positions,
                 cache=None if layer_cache is None else layer_cache.get(f"b{bi}"),
                 cache_index=cache_index, memory=memory, causal=causal,
+                page_table=page_table,
             )
             h, aux = y, aux + a
             if new_layer_cache is not None and c is not None:

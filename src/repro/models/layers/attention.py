@@ -66,6 +66,43 @@ CACHE_AXES = {
 }
 
 
+def init_paged_cache(cfg, num_pages: int, page_size: int, dtype):
+    """Paged KV store: ``(num_pages, page_size, hkv, hd)`` per leaf. Page ids
+    are global across layers (one logical page = a slab through every
+    attention leaf); slots map logical→physical pages via a page table."""
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, hkv, hd), dtype),
+    }
+
+
+PAGED_CACHE_AXES = {
+    "k": (None, None, "kv_heads", "head_dim"),
+    "v": (None, None, "kv_heads", "head_dim"),
+}
+
+
+def _paged_write(leaf, val, page_table, positions):
+    """Scatter ``val`` (B, S, hkv, hd) into the paged ``leaf``
+    (P, ps, hkv, hd) at logical ``positions`` (B, S) through ``page_table``
+    (B, max_pages). Rows whose table entry is 0 land in the scratch page."""
+    ps = leaf.shape[1]
+    rows = jnp.arange(page_table.shape[0])[:, None]
+    phys = page_table[rows, positions // ps].reshape(-1)
+    off = (positions % ps).reshape(-1)
+    flat = val.reshape((-1,) + val.shape[2:]).astype(leaf.dtype)
+    return leaf.at[phys, off].set(flat, mode="drop")
+
+
+def _paged_gather(leaf, page_table):
+    """Gather a slot-major dense view (B, max_pages * ps, hkv, hd) of the
+    paged ``leaf`` in logical-position order."""
+    b, mp = page_table.shape
+    out = leaf[page_table.reshape(-1)]  # (B*mp, ps, hkv, hd)
+    return out.reshape((b, mp * leaf.shape[1]) + leaf.shape[2:])
+
+
 def _project_qkv(params, x, memory, cfg):
     dtype = x.dtype
     wq = params["wq"].astype(dtype)
@@ -160,27 +197,67 @@ def apply(
     cache=None,
     cache_index=None,
     memory=None,
+    page_table=None,
 ):
     """Returns (out, new_cache).
 
     train/prefill: ``cache`` is None (train) or a zero cache to fill
     (prefill). decode: ``x`` is (B, 1, d) and ``cache_index`` a scalar.
     ``memory`` (B, T, d) switches to cross-attention (no cache, no causal).
+
+    ``page_table`` (B, max_pages) int32 switches the cache to the paged
+    layout (leaves (num_pages, page_size, hkv, hd)): decode scatters the new
+    KV at ``page_table[b, pos // ps]`` and attends over the table-gathered
+    view; with s > 1 it is a *chunked prefill* continuation — the chunk's KV
+    is written at its absolute ``positions`` and queries attend to every
+    previously-written position (shared prefix pages included) plus the
+    chunk itself, under the usual causal/window mask.
     """
     b, s, d = x.shape
     decode = cache is not None and s == 1 and cache_index is not None
+    chunked = cache is not None and s > 1 and page_table is not None and memory is None
     q, k, v = _project_qkv(params, x, memory, cfg)
     q = constrain(q, ("batch", "seq", "heads", None))
 
     if memory is None:
         q = rope.apply_rope(q, positions, cfg.rope_theta)
-        if decode:
+        if decode or chunked:
             k = rope.apply_rope(k, positions, cfg.rope_theta)
         else:
             k = rope.apply_rope(k, jnp.arange(k.shape[1])[None, :], cfg.rope_theta)
 
     new_cache = cache
-    if decode:
+    if chunked:
+        k_cache = constrain(_paged_write(cache["k"], k, page_table, positions), PAGED_CACHE_AXES["k"])
+        v_cache = constrain(_paged_write(cache["v"], v, page_table, positions), PAGED_CACHE_AXES["v"])
+        new_cache = {"k": k_cache, "v": v_cache}
+        kg = _paged_gather(k_cache, page_table)
+        vg = _paged_gather(v_cache, page_table)
+        k_pos = jnp.arange(kg.shape[1])[None, :]
+        mask = _mask(
+            jnp.broadcast_to(positions, (b, s)),
+            jnp.broadcast_to(k_pos, (b, kg.shape[1])),
+            causal,
+            sliding_window,
+        )
+        out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
+    elif decode and page_table is not None:
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim == 0:
+            idx = jnp.full((b,), idx, jnp.int32)
+        k_cache = constrain(_paged_write(cache["k"], k, page_table, idx[:, None]), PAGED_CACHE_AXES["k"])
+        v_cache = constrain(_paged_write(cache["v"], v, page_table, idx[:, None]), PAGED_CACHE_AXES["v"])
+        new_cache = {"k": k_cache, "v": v_cache}
+        kg = _paged_gather(k_cache, page_table)
+        vg = _paged_gather(v_cache, page_table)
+        k_pos = jnp.arange(kg.shape[1])[None, :]
+        write_pos = idx[:, None]
+        valid = k_pos <= write_pos
+        if sliding_window is not None:
+            valid = valid & (k_pos > write_pos - sliding_window)
+        mask = jnp.broadcast_to(valid[:, None, :], (b, 1, kg.shape[1]))
+        out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
+    elif decode:
         # write new kv at cache_index; attend to the full (seq-sharded) cache.
         # cache_index may be a scalar (static batch: all rows at one depth) or
         # a (B,) vector (slot ring: each request at its own decode depth).

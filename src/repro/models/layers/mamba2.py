@@ -101,24 +101,39 @@ def apply(params, x, cfg, *, cache=None, cache_index=None):
     w = params["conv_w"].astype(dtype)  # (W, conv_ch)
     if decode:
         window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,ch)
-        conv_out = jnp.einsum("bwc,wc->bc", window, w)[:, None, :] + params["conv_b"].astype(dtype)
+        # same f32 conv op as the prefill path below (not a bf16 einsum), so
+        # a token produces bit-identical activations whether it arrives via
+        # prefill or single-token decode — the paged engine feeds tail prompt
+        # tokens through decode ticks and relies on this equivalence
+        conv_out = jax.lax.conv_general_dilated(
+            window.astype(jnp.float32),
+            w.astype(jnp.float32)[:, None, :],
+            window_strides=(1,),
+            padding=[(0, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=conv_ch,
+        ).astype(dtype) + params["conv_b"].astype(dtype)
         new_conv = window[:, 1:, :]
     else:
-        # causal depthwise conv: left-pad by (W-1), feature_group per channel
+        # causal depthwise conv, feature_group per channel. The left context
+        # is the cache's rolling window when one is present (zeros on a fresh
+        # cache — identical to plain left-padding — and the previous chunk's
+        # tail during chunked prefill) so prefill can resume mid-sequence.
+        left = (
+            cache["conv"] if cache is not None
+            else jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), dtype)
+        )
+        windowed = jnp.concatenate([left.astype(dtype), conv_in], axis=1)
         conv_out = jax.lax.conv_general_dilated(
-            conv_in.astype(jnp.float32),
+            windowed.astype(jnp.float32),
             w.astype(jnp.float32)[:, None, :],  # (W, 1, ch) as (spatial, in/group, out)
             window_strides=(1,),
-            padding=[(cfg.ssm_conv_width - 1, 0)],
+            padding=[(0, 0)],
             dimension_numbers=("NWC", "WIO", "NWC"),
             feature_group_count=conv_ch,
         ).astype(dtype) + params["conv_b"].astype(dtype)
         new_conv = (
-            jnp.concatenate(
-                [jnp.zeros((b, cfg.ssm_conv_width - 1, conv_ch), dtype), conv_in], axis=1
-            )[:, -(cfg.ssm_conv_width - 1) :, :]
-            if cache is not None
-            else None
+            windowed[:, -(cfg.ssm_conv_width - 1) :, :] if cache is not None else None
         )
     conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(dtype)
     xin = conv_out[..., :d_in]
@@ -143,7 +158,9 @@ def apply(params, x, cfg, *, cache=None, cache_index=None):
         y = y1[:, None]  # (B,1,H,hd)
         new_cache = {"ssm": new_state, "conv": new_conv}
     else:
-        init_state = None
+        # carry the SSM state in from the cache (zeros when fresh) so chunked
+        # prefill continues the recurrence exactly where the last chunk ended
+        init_state = cache["ssm"] if cache is not None else None
         y, final_state = gla_scan(q, kk, vv, lw, include_current=True, initial_state=init_state)
         if cache is not None:
             new_cache = {"ssm": final_state, "conv": new_conv}

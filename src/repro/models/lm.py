@@ -132,6 +132,114 @@ class LanguageModel:
                 axes[f"seg{i}"] = a
         return axes
 
+    # -- paged KV cache (continuous batching v2) ------------------------------
+    # One merged tree: attention leaves live in a shared page pool
+    # ((layers, num_pages, page_size, hkv, hd) — a page id indexes axis 1 of
+    # every attention leaf at once), while O(1) recurrent state (SSM, conv,
+    # RWKV shift) stays per-slot dense ((layers, state_batch, ...)). The
+    # helpers below walk the tree and dispatch on which side of that split a
+    # leaf is on (anything under an "attn" key is paged KV).
+
+    def init_paged_cache(self, num_pages: int, page_size: int, state_batch: int,
+                         dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache = {}
+        for i, seg in enumerate(cfg.segments):
+            c = blocks.init_segment_cache_paged(
+                cfg, seg, num_pages, page_size, state_batch, dtype
+            )
+            if c:
+                cache[f"seg{i}"] = c
+        return cache
+
+    @staticmethod
+    def _map_paged(tree, kv_fn, state_fn, _in_attn=False):
+        if isinstance(tree, dict):
+            return {
+                k: LanguageModel._map_paged(v, kv_fn, state_fn, _in_attn or k == "attn")
+                for k, v in tree.items()
+            }
+        return kv_fn(tree) if _in_attn else state_fn(tree)
+
+    @staticmethod
+    def _map2_paged(a, b, kv_fn, state_fn, _in_attn=False):
+        if isinstance(a, dict):
+            return {
+                k: LanguageModel._map2_paged(a[k], b[k], kv_fn, state_fn, _in_attn or k == "attn")
+                for k in a
+            }
+        return kv_fn(a, b) if _in_attn else state_fn(a, b)
+
+    def paged_state_slice(self, cache, width: int):
+        """Static-width view: state rows [:width], paged KV untouched."""
+        return self._map_paged(cache, lambda l: l, lambda l: l[:, :width])
+
+    def paged_state_merge(self, full, new, width: int, active=None):
+        """Write a width-sliced step's updated state rows back into the
+        full-width buffer; the paged KV slab is taken from the step. With
+        ``active`` (width,) bool, only active rows take the new state —
+        masked lanes must NOT advance their recurrence (a slot awaiting its
+        next prefill chunk rides the tick as a dead lane; its attention
+        writes land at positions the chunk will overwrite, but a recurrent
+        state update would be irreversible corruption)."""
+        def upd(f, n):
+            n = n.astype(f.dtype)
+            if active is not None:
+                mask = active.reshape((1, active.shape[0]) + (1,) * (n.ndim - 2))
+                n = jnp.where(mask, n, f[:, :width])
+            return f.at[:, :width].set(n)
+
+        return self._map2_paged(full, new, lambda f, n: n, upd)
+
+    def paged_state_row(self, cache, slot):
+        """Batch-1 view for a chunk prefill: state row ``slot`` (traced),
+        the full paged KV slab riding along."""
+        return self._map_paged(
+            cache, lambda l: l,
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+        )
+
+    def paged_state_merge_row(self, full, new, slot):
+        return self._map2_paged(
+            full, new, lambda f, n: n,
+            lambda f, n: jax.lax.dynamic_update_slice_in_dim(f, n.astype(f.dtype), slot, axis=1),
+        )
+
+    def paged_zero_state_row(self, cache, slot):
+        """Clear slot ``slot``'s recurrent state at admission (the row may
+        hold a previous occupant's state; attention pages need no clearing —
+        the causal mask never reads unwritten positions)."""
+        return self._map_paged(
+            cache, lambda l: l,
+            lambda l: jax.lax.dynamic_update_slice_in_dim(
+                l, jnp.zeros((l.shape[0], 1) + l.shape[2:], l.dtype), slot, axis=1
+            ),
+        )
+
+    def paged_copy_page(self, cache, src, dst):
+        """Copy-on-write: duplicate physical page ``src`` into ``dst`` across
+        every attention leaf (the divergence page of a partial prefix match)."""
+        def cp(l):
+            row = jax.lax.dynamic_slice_in_dim(l, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(l, row, dst, axis=1)
+        return self._map_paged(cache, cp, lambda l: l)
+
+    def paged_kv_bytes_per_page(self, page_size: int) -> int:
+        """Host-side accounting: bytes one page occupies across all
+        attention leaves (the unit of the pool's memory high-water mark)."""
+        import numpy as np
+
+        cache = jax.eval_shape(lambda: self.init_paged_cache(2, page_size, 1))
+        total = 0
+
+        def count(l):
+            nonlocal total
+            total += int(np.prod(l.shape)) // l.shape[1] * jnp.dtype(l.dtype).itemsize
+            return l
+
+        self._map_paged(cache, count, lambda l: l)
+        return total
+
     # -- continuous-batching slot helpers ------------------------------------
     # Cache leaves are stacked over the scanned ``layers`` axis
     # (init_segment_cache), so the batch/slot dimension is axis 1:
@@ -176,10 +284,12 @@ class LanguageModel:
         logits = embedding.logits(params["embed"], x[:, -1:, :], cfg)
         return logits, new_cache
 
-    def decode_step(self, params, token, cache, cache_index, memory=None):
+    def decode_step(self, params, token, cache, cache_index, memory=None, page_table=None):
         """One-token decode. token: (B,1) int32; cache_index: scalar int32, or
         (B,) int32 when every batch row (slot) decodes at its own depth —
-        the continuous-batching path. Returns (logits (B,1,V), new_cache)."""
+        the continuous-batching path. With ``page_table`` (B, max_pages) the
+        attention cache is paged (see :meth:`init_paged_cache`).
+        Returns (logits (B,1,V), new_cache)."""
         cfg = self.cfg
         x = embedding.embed(params["embed"], token, cfg)
         idx = jnp.asarray(cache_index, jnp.int32)
@@ -193,8 +303,35 @@ class LanguageModel:
             x, c, _ = blocks.apply_segment(
                 params[f"seg{i}"], x, cfg, seg, positions=positions,
                 cache=cache.get(f"seg{i}"), cache_index=cache_index, memory=memory,
+                page_table=page_table,
             )
             if c is not None:
                 new_cache[f"seg{i}"] = c
         x = norm.apply(params["final_norm"], x, cfg.norm_eps)
         return embedding.logits(params["embed"], x, cfg), new_cache
+
+    def prefill_chunk(self, params, tokens, cache, pos_start, slot, page_table, memory=None):
+        """One chunk of a paged, chunked prefill: ``tokens`` (1, C) are the
+        prompt positions ``[pos_start, pos_start + C)`` of the request in
+        state row ``slot``. Attention KV is scattered into the request's
+        pages and attends to everything already written (shared prefix pages
+        included); recurrent state resumes from — and is written back to —
+        row ``slot``. ``pos_start``/``slot`` are traced, so one compiled
+        executable serves every prompt length and offset at this chunk size.
+        Returns (logits (1,1,V) for the chunk's last token, new full cache)."""
+        cfg = self.cfg
+        x = embedding.embed(params["embed"], tokens, cfg)
+        c_len = tokens.shape[1]
+        positions = pos_start + jnp.arange(c_len, dtype=jnp.int32)[None, :]
+        row = self.paged_state_row(cache, slot)
+        new_row = {}
+        for i, seg in enumerate(cfg.segments):
+            x, c, _ = blocks.apply_segment(
+                params[f"seg{i}"], x, cfg, seg, positions=positions,
+                cache=row.get(f"seg{i}"), memory=memory, page_table=page_table,
+            )
+            if c is not None:
+                new_row[f"seg{i}"] = c
+        x = norm.apply(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+        logits = embedding.logits(params["embed"], x, cfg)
+        return logits, self.paged_state_merge_row(cache, new_row, slot)

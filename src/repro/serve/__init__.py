@@ -1,22 +1,76 @@
+"""Serving stack: engines, scheduling, and the paged KV memory model.
+
+Engines (``repro.serve.engine``):
+
+- :class:`ServeEngine` — static batch, dense per-row KV cache.
+- :class:`ContinuousBatchingEngine` — FIFO queue + slot ring + stagewise
+  (b₁ρˢ) admission ramp over a dense cache.
+- :class:`PagedContinuousBatchingEngine` — the same scheduling over a
+  **paged** cache with radix prefix sharing and chunked prefill.
+
+Memory model of the paged engine (``repro.serve.pages``):
+
+- Attention KV is stored in a :class:`PagePool` of fixed-size pages; one
+  *page* is ``page_size`` token positions across **every** attention cache
+  leaf of the model (a cross-layer slab), so a single physical page id per
+  logical page suffices. Page 0 is a reserved scratch page: masked decode
+  lanes scatter into it harmlessly.
+- Each slot owns a page *table* (logical page → physical page); position
+  ``p`` lives at ``(table[p // page_size], p % page_size)``. Resident KV
+  therefore scales with live tokens, not ``max_slots × cache_len``.
+- Recurrent state (SSM / conv / RWKV shift) is O(1) per slot and stays
+  dense at full ``max_slots`` width — stage ramps and chunk steps never
+  reshape device state, keeping compile counts bounded.
+- Prompt prefixes are shared through a :class:`RadixPrefixIndex`: full,
+  immutable prompt pages are published to a radix trie after prefill;
+  later prompts alias the matched chain (refcounted), and a divergence
+  inside a page is served copy-on-write. Published pages are never written
+  again; the index's own reference keeps them cached after the owning
+  request finishes, until LRU eviction under pool pressure.
+"""
 from repro.serve.step import (
+    build_chunk_prefill_step,
     build_decode_step,
+    build_paged_decode_step,
     build_prefill_step,
     build_slot_decode_step,
     sample_tokens,
 )
+from repro.serve.pages import (
+    AdmissionPlan,
+    PagePool,
+    RadixPrefixIndex,
+    plan_admission,
+    publish_prefix,
+    release_pages,
+)
 from repro.serve.scheduler import AdmissionController, Request, RequestScheduler
-from repro.serve.slots import SlotManager
-from repro.serve.engine import ContinuousBatchingEngine, ServeEngine
+from repro.serve.slots import PagedSlotManager, SlotManager
+from repro.serve.engine import (
+    ContinuousBatchingEngine,
+    PagedContinuousBatchingEngine,
+    ServeEngine,
+)
 
 __all__ = [
     "AdmissionController",
+    "AdmissionPlan",
     "ContinuousBatchingEngine",
+    "PagePool",
+    "PagedContinuousBatchingEngine",
+    "PagedSlotManager",
+    "RadixPrefixIndex",
     "Request",
     "RequestScheduler",
     "ServeEngine",
     "SlotManager",
+    "build_chunk_prefill_step",
     "build_decode_step",
+    "build_paged_decode_step",
     "build_prefill_step",
     "build_slot_decode_step",
+    "plan_admission",
+    "publish_prefix",
+    "release_pages",
     "sample_tokens",
 ]

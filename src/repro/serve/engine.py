@@ -25,10 +25,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LanguageModel
+from repro.serve.pages import (
+    PagePool,
+    RadixPrefixIndex,
+    plan_admission,
+    publish_prefix,
+    release_pages,
+)
 from repro.serve.scheduler import DONE, AdmissionController, RequestScheduler
-from repro.serve.slots import SlotManager
+from repro.serve.slots import PagedSlotManager, SlotManager
 from repro.serve.step import (
+    build_chunk_prefill_step,
     build_decode_step,
+    build_paged_decode_step,
     build_prefill_step,
     build_slot_decode_step,
     sample_tokens,
@@ -261,4 +270,340 @@ class ContinuousBatchingEngine:
             rid: req.latency
             for rid, req in self.scheduler.requests.items()
             if req.state == DONE
+        }
+
+
+class PagedContinuousBatchingEngine:
+    """Continuous batching over a paged KV cache with radix prefix sharing.
+
+    Differences vs :class:`ContinuousBatchingEngine`:
+
+    - **Memory**: attention KV lives in a :class:`~repro.serve.pages.PagePool`
+      of ``page_size``-token pages; a slot holds a page *table*, not a dense
+      ``cache_len`` row, so resident KV scales with live tokens (high-water
+      mark reported in ``stats``) instead of ``max_slots × cache_len``.
+    - **Prefix sharing**: prompts sharing a prefix alias the same published,
+      immutable pages through a :class:`~repro.serve.pages.RadixPrefixIndex`
+      (token-granular: the divergence page is copy-on-written). Enabled for
+      attention-only decoder models; recurrent-state (SSM/RWKV) and
+      encoder-decoder families silently disable it — their prefix state is
+      not addressable by token content alone.
+    - **Chunked prefill**: a prompt is computed in fixed-size chunks (one
+      compiled executable per entry of ``prefill_chunks``, since position
+      offsets are traced), at most one chunk per engine tick, interleaved
+      with decode ticks so long prompts don't stall running requests. The
+      sub-chunk tail rides the regular decode tick teacher-forced — zero
+      extra compiled shapes for arbitrary prompt lengths.
+
+    Greedy outputs are token-identical to the static :class:`ServeEngine`;
+    the SEBS admission ladder (one compiled decode variant per stage) is
+    unchanged.
+    """
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        cache_len: int = 256,
+        max_slots: int = 8,
+        b1: Optional[int] = None,
+        rho: float = 2.0,
+        patience: int = 2,
+        admission: Optional[AdmissionController] = None,
+        seed: int = 0,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        prefix_cache: bool = True,
+        prefill_chunks=(32,),
+    ):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.max_pages = -(-cache_len // page_size)  # logical pages per slot
+        # default pool: dense-equivalent capacity (+ scratch page 0); pass a
+        # smaller num_pages to run under memory pressure (LRU eviction /
+        # deferred admission kick in)
+        self.num_pages = (
+            num_pages if num_pages is not None else 1 + max_slots * self.max_pages
+        )
+        self.pool = PagePool(self.num_pages, page_size)
+        self.prefix_sharing = bool(prefix_cache) and self._sharing_supported(model)
+        self.index = RadixPrefixIndex(self.pool) if self.prefix_sharing else None
+        self.prefill_chunks = tuple(sorted(set(int(c) for c in prefill_chunks)))
+        assert self.prefill_chunks and min(self.prefill_chunks) >= 1
+        self.max_slots = max_slots
+        self.admission = admission or AdmissionController(
+            b1=b1 if b1 is not None else max_slots,
+            rho=rho,
+            max_slots=max_slots,
+            patience=patience,
+        )
+        self.scheduler = RequestScheduler()
+        # device state: paged KV slab + full-width recurrent state, allocated
+        # once — stage ramps only widen host arrays and the compiled tick
+        self.cache = model.init_paged_cache(self.num_pages, page_size, max_slots)
+        self._decodes: Dict[int, Any] = {}  # ring width -> paged decode tick
+        self._chunk_steps: Dict[int, Any] = {}  # chunk size -> prefill step
+        self.decode_compiles = 0
+        self.prefill_compiles = 0
+        self._copy_page = jax.jit(model.paged_copy_page)
+        self._zero_state = jax.jit(model.paged_zero_state_row)
+        self._encode = jax.jit(model._encode) if model.cfg.is_encoder_decoder else None
+        self._rng = jax.random.key(seed)
+        self._chunk_rr = 0  # round-robin cursor over prefilling slots
+        self.stats: Dict[str, Any] = {
+            "ticks": 0,
+            "decoded_tokens": 0,
+            "peak_width": 0,
+            "stage_history": deque(maxlen=4096),
+            "prefill_chunks": 0,
+            "prefill_tokens_computed": 0,
+            "prefix_tokens_reused": 0,
+            "prompt_tokens_total": 0,
+            "cow_copies": 0,
+        }
+
+    @staticmethod
+    def _sharing_supported(model: LanguageModel) -> bool:
+        cfg = model.cfg
+        mixers = {b.mixer for s in cfg.segments for b in s.body}
+        return (
+            not cfg.is_encoder_decoder
+            and not cfg.num_vision_tokens
+            and mixers <= {"attn", "swa"}
+        )
+
+    # -- request intake ------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        memory=None,
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        # same per-request bound as the dense engines (max_pages rounds
+        # cache_len UP to a page multiple; don't let that widen the contract)
+        assert prompt.size + max_new_tokens <= self.cache_len, "cache_len too small"
+        if self.model.cfg.is_encoder_decoder and memory is None:
+            raise ValueError("encoder-decoder model requires per-request audio memory")
+        return self.scheduler.submit(
+            prompt, max_new_tokens, temperature=temperature, top_k=top_k, memory=memory
+        )
+
+    # -- compiled-step caches ------------------------------------------------
+    def _decode_for(self, width: int):
+        if width not in self._decodes:
+            self._decodes[width] = build_paged_decode_step(
+                self.model, width, donate=False
+            )
+            self.decode_compiles += 1
+        return self._decodes[width]
+
+    def _chunk_for(self, size: int):
+        if size not in self._chunk_steps:
+            self._chunk_steps[size] = build_chunk_prefill_step(self.model, donate=False)
+            self.prefill_compiles += 1
+        return self._chunk_steps[size]
+
+    # -- admission -----------------------------------------------------------
+    def _admit(self, slots: PagedSlotManager, i: int, req, memory_buf):
+        total = len(req.prompt) + req.max_new_tokens
+        plan = plan_admission(
+            self.pool, self.index, req.prompt, total, share=self.prefix_sharing
+        )
+        if plan is None:
+            return None, memory_buf
+        if plan.cow_src is not None:
+            # copy-on-write: duplicate the divergence page, reuse its first
+            # reuse_len % page_size positions, overwrite from there on
+            self.cache = self._copy_page(
+                self.cache, jnp.int32(plan.cow_src), jnp.int32(plan.new_pages[0])
+            )
+            self.stats["cow_copies"] += 1
+        self.cache = self._zero_state(self.cache, jnp.int32(i))
+        if self._encode is not None:
+            row = self._encode(self.params, {"audio_embeds": jnp.asarray(req.memory)})
+            memory_buf = jax.lax.dynamic_update_slice_in_dim(
+                memory_buf, row.astype(memory_buf.dtype), i, axis=0
+            )
+        slots.admit(i, req, plan)
+        self.stats["prefix_tokens_reused"] += plan.reuse_len
+        self.stats["prompt_tokens_total"] += len(req.prompt)
+        return plan, memory_buf
+
+    def _sample_first(self, req, logits):
+        self._rng, sub = jax.random.split(self._rng)
+        first = sample_tokens(
+            logits[:, -1, : self.model.cfg.vocab_size].astype(jnp.float32),
+            sub,
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+        )
+        return int(first[0])
+
+    def _finish(self, slots: PagedSlotManager, i: int, completed):
+        slot = slots.slots[i]
+        req = slot.request
+        release_pages(self.pool, slot.plan.pages)
+        self.scheduler.finish(req)
+        completed[req.id] = req.tokens()
+        slots.release(i)
+
+    def _maybe_publish(self, slots: PagedSlotManager, i: int):
+        slot = slots.slots[i]
+        if self.index is None or slot.published or not slot.decoding:
+            return
+        publish_prefix(self.index, slot.request.prompt, slot.plan.pages)
+        slot.published = True
+
+    # -- the serve loop ------------------------------------------------------
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive admission + chunked prefill + decode until every submitted
+        request is done. Returns results completed during THIS call."""
+        completed: Dict[int, np.ndarray] = {}
+        width = self.admission.budget()
+        slots = PagedSlotManager(
+            width, self.max_pages, chunk_floor=min(self.prefill_chunks)
+        )
+        memory_buf = None
+        if self.model.cfg.is_encoder_decoder:
+            cfg = self.model.cfg
+            memory_buf = jnp.zeros(
+                (self.max_slots, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+
+        while self.scheduler.has_work():
+            # 1. stagewise ramp (host-side only: device state is full-width)
+            budget = self.admission.observe(self.scheduler.demand)
+            if budget > width:
+                slots.grow(budget)
+                width = budget
+            self.stats["peak_width"] = max(self.stats["peak_width"], width)
+
+            # 2. admit queued requests into freed slots; a request that finds
+            #    no pages (even after LRU eviction) waits for releases
+            admitted = 0
+            for i in slots.free_indices():
+                req = self.scheduler.pop_waiting()
+                if req is None:
+                    break
+                plan, memory_buf = self._admit(slots, i, req, memory_buf)
+                if plan is None:
+                    self.scheduler.requeue(req)
+                    break
+                admitted += 1
+            if slots.num_active() == 0:
+                if admitted == 0 and self.scheduler.has_work():
+                    raise RuntimeError(
+                        f"page pool ({self.pool.capacity} pages of {self.page_size}) "
+                        "cannot fit the next request even after eviction"
+                    )
+                if not self.scheduler.has_work():
+                    break
+
+            # 3. one prefill chunk (round-robin over prefilling slots, so a
+            #    long prompt neither stalls decode nor starves other
+            #    prefills of their chunk turn)
+            prefilling = slots.prefilling_indices()
+            self._chunk_rr += 1
+            for i in prefilling[self._chunk_rr % max(len(prefilling), 1):] + \
+                    prefilling[: self._chunk_rr % max(len(prefilling), 1)]:
+                slot = slots.slots[i]
+                rem = slot.prompt_remaining
+                bucket = max(
+                    (c for c in self.prefill_chunks if c <= rem), default=None
+                )
+                if bucket is None:
+                    continue  # sub-chunk tail: teacher-forced by the tick below
+                step = self._chunk_for(bucket)
+                req = slot.request
+                toks = jnp.asarray(req.prompt[slot.fill : slot.fill + bucket][None, :])
+                mem = None
+                if memory_buf is not None:
+                    mem = jax.lax.dynamic_slice_in_dim(memory_buf, i, 1, axis=0)
+                logits, self.cache = step(
+                    self.params,
+                    toks,
+                    self.cache,
+                    jnp.int32(slot.fill),
+                    jnp.int32(i),
+                    jnp.asarray(slots.page_table[i : i + 1]),
+                    memory=mem,
+                )
+                slot.fill += bucket
+                self.stats["prefill_chunks"] += 1
+                self.stats["prefill_tokens_computed"] += bucket
+                if slot.prompt_remaining == 0:
+                    slots.start_decoding(i, self._sample_first(req, logits))
+                    self._maybe_publish(slots, i)
+                    if len(req.generated) >= req.max_new_tokens:
+                        self._finish(slots, i, completed)
+                break
+
+            # 4. one fixed-shape decode tick: decoding slots advance one
+            #    token, prefilling slots teacher-force their prompt tail
+            active = slots.active_mask()
+            if not active.any():
+                continue
+            step = self._decode_for(width)
+            self._rng, sub = jax.random.split(self._rng)
+            n_forced = sum(
+                1 for i in range(width) if active[i] and slots.slots[i].prefilling
+            )
+            nxt, self.cache = step(
+                self.params,
+                jnp.asarray(slots.feed_tokens()[:, None]),
+                self.cache,
+                jnp.asarray(slots.positions()),
+                jnp.asarray(slots.page_table),
+                jnp.asarray(active),
+                jnp.asarray(slots.temperatures()),
+                jnp.asarray(slots.top_ks()),
+                sub,
+                memory=memory_buf,
+            )
+            self.stats["ticks"] += 1
+            self.stats["decoded_tokens"] += int(active.sum()) - n_forced
+            self.stats["prefill_tokens_computed"] += n_forced
+            self.stats["stage_history"].append(self.admission.stage)
+
+            # 5. bookkeeping: newly-decoding slots publish their prefix,
+            #    finished requests release their pages
+            for i in slots.advance(np.asarray(nxt)):
+                self._maybe_publish(slots, i)
+                self._finish(slots, i, completed)
+            for i in range(width):
+                if not slots.slots[i].free:
+                    self._maybe_publish(slots, i)
+
+        return completed
+
+    # -- reporting -----------------------------------------------------------
+    def latencies(self) -> Dict[int, float]:
+        return {
+            rid: req.latency
+            for rid, req in self.scheduler.requests.items()
+            if req.state == DONE
+        }
+
+    def memory_stats(self) -> Dict[str, Any]:
+        """KV memory accounting (attention leaves only; recurrent state is
+        O(1)/slot in both layouts): the paged high-water mark vs what the
+        dense engine pins for the same ring."""
+        per_page = self.model.paged_kv_bytes_per_page(self.page_size)
+        dense_rows = max(self.stats["peak_width"], 1)
+        return {
+            "page_size": self.page_size,
+            "pages_capacity": self.pool.capacity,
+            "pages_peak": self.pool.peak_used,
+            "kv_bytes_peak": self.pool.peak_used * per_page,
+            "kv_bytes_dense_equiv": dense_rows * self.max_pages * per_page,
+            "prefix_hit_rate": (
+                self.stats["prefix_tokens_reused"]
+                / max(self.stats["prompt_tokens_total"], 1)
+            ),
         }

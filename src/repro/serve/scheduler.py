@@ -110,6 +110,14 @@ class RequestScheduler:
         req.t_finish = time.perf_counter()
         self._running -= 1
 
+    def requeue(self, req: Request) -> None:
+        """Return a just-popped request to the queue head (admission found no
+        pages for it this tick; FIFO order is preserved)."""
+        assert req.state == RUNNING
+        req.state = QUEUED
+        self._running -= 1
+        self._queue.appendleft(req)
+
     @property
     def num_waiting(self) -> int:
         return len(self._queue)

@@ -54,6 +54,56 @@ def sample_tokens(logits, key, temperature, top_k):
     return jnp.where(temperature > 0, sampled, greedy)
 
 
+def build_paged_decode_step(model: LanguageModel, width: int, *, donate: bool = True):
+    """Fixed-shape decode tick over a paged slot ring.
+
+    Like :func:`build_slot_decode_step` but KV reads/writes go through a
+    per-slot ``page_table`` (B, max_pages) into the shared page pool, and the
+    cache's recurrent-state leaves stay at the full ``max_slots`` width: the
+    step slices the first ``width`` rows (static per compile), advances them,
+    and writes them back — so stage ramps never reshape device state and the
+    chunk-prefill executable (which sees the full-width tree) never recompiles.
+
+    The tick doubles as the tail of a chunked prefill: a slot still being
+    prefilled rides along *teacher-forced* — the host feeds the next prompt
+    token instead of the last sample, the KV/state write at its position is
+    exactly what prefill would have produced, and the sampled output is
+    discarded until the final prompt token (whose sample is the request's
+    first generated token).
+    """
+    vocab = model.cfg.vocab_size
+
+    def step(params, tokens, cache, cache_pos, page_table, active, temperature, top_k, key, memory=None):
+        sliced = model.paged_state_slice(cache, width)
+        mem = None if memory is None else memory[:width]
+        logits, new_sliced = model.decode_step(
+            params, tokens, sliced, cache_pos, memory=mem, page_table=page_table
+        )
+        logits = logits[:, -1, :vocab].astype(jnp.float32)
+        nxt = sample_tokens(logits, key, temperature, top_k)
+        nxt = jnp.where(active, nxt, tokens[:, 0])
+        new_cache = model.paged_state_merge(cache, new_sliced, width, active=active)
+        return nxt, new_cache
+
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(step, **kwargs)
+
+
+def build_chunk_prefill_step(model: LanguageModel, *, donate: bool = True):
+    """Paged chunk prefill: one call computes ``chunk`` prompt tokens. The
+    chunk size is baked into the token shape and everything else (position
+    offset, state row, page table content) is traced — one compiled
+    executable per chunk-size bucket, regardless of prompt length mix."""
+
+    def step(params, tokens, cache, pos_start, slot, page_table, memory=None):
+        return model.prefill_chunk(
+            params, tokens, cache, pos_start, slot, page_table, memory=memory
+        )
+
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(step, **kwargs)
+
+
 def build_slot_decode_step(model: LanguageModel, *, donate: bool = True):
     """Fixed-shape decode tick over the slot ring (continuous batching).
 

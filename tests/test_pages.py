@@ -1,0 +1,191 @@
+"""PagePool / RadixPrefixIndex invariants under random admit / finish /
+divergence sequences — property-tested against the *same* planning code the
+paged engine runs (``plan_admission`` / ``publish_prefix`` /
+``release_pages``), entirely host-side (no model, no device).
+
+Checked invariants:
+
+- no double-free; the free list holds exactly the zero-refcount pages
+  (``PagePool.check``), and free + live == pool capacity at every step;
+- a page's refcount is zero iff no slot and no index entry references it
+  (cross-checked against an independently tracked reference model);
+- shared pages are never written after publication: every position a plan
+  computes (``>= reuse_len``) falls inside the plan's freshly-allocated
+  ``new_pages``, never inside ``shared`` or any currently-published page;
+- copy-on-write: a partial prefix match always duplicates into a fresh
+  private page, and the COW source is a published page.
+"""
+import random
+
+import pytest
+
+from tests._propcheck import given, settings, strategies as st
+
+from repro.serve.pages import (
+    PagePool,
+    RadixPrefixIndex,
+    plan_admission,
+    publish_prefix,
+    release_pages,
+)
+
+
+def _refcount_model(pool, index, live_plans):
+    """Independent expectation for every page's refcount: one per slot whose
+    plan references it + one if the index holds it."""
+    expect = [1] + [0] * (pool.num_pages - 1)  # scratch page 0 held forever
+    for plan in live_plans.values():
+        for pid in plan.pages:
+            expect[pid] += 1
+    if index is not None:
+        stack = list(index._root.children.values())
+        while stack:
+            n = stack.pop()
+            expect[n.page] += 1
+            stack.extend(n.children.values())
+    return expect
+
+
+def _published_pages(index):
+    if index is None:
+        return set()
+    out, stack = set(), list(index._root.children.values())
+    while stack:
+        n = stack.pop()
+        out.add(n.page)
+        stack.extend(n.children.values())
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    num_pages=st.integers(min_value=4, max_value=24),
+    page_size=st.sampled_from([1, 2, 4, 8]),
+    share=st.sampled_from([True, False]),
+)
+def test_pool_and_index_invariants_random_lifecycle(seed, num_pages, page_size, share):
+    rng = random.Random(seed)
+    pool = PagePool(num_pages, page_size)
+    index = RadixPrefixIndex(pool) if share else None
+
+    # a small prompt universe with deliberate shared prefixes + divergences
+    roots = [
+        [rng.randrange(16) for _ in range(rng.randint(1, 3 * page_size))]
+        for _ in range(3)
+    ]
+    live_plans = {}  # slot id -> plan
+    prompts = {}  # slot id -> prompt
+    next_slot = 0
+
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.55:  # admit
+            root = rng.choice(roots)
+            # random divergence point: shared prefix then fresh suffix
+            cut = rng.randint(0, len(root))
+            prompt = root[:cut] + [rng.randrange(16) for _ in range(rng.randint(1, 5))]
+            total = len(prompt) + rng.randint(1, 4)  # + decode budget
+            plan = plan_admission(pool, index, prompt, total, share=share)
+            if plan is None:
+                # genuinely out of pages for this request — acceptable
+                pool.check()
+                continue
+            # planning may have LRU-evicted published pages; judge against
+            # the set that is published NOW
+            published = _published_pages(index)
+            # -- sharing invariants ----------------------------------------
+            assert plan.reuse_len < len(prompt)
+            assert len(plan.shared) * page_size <= plan.reuse_len
+            assert not set(plan.new_pages) & published, (
+                "a to-be-written page is still published"
+            )
+            assert not set(plan.new_pages) & set(plan.shared)
+            for pid in plan.shared:
+                assert pid in published, "shared page not published"
+            if plan.cow_src is not None:
+                assert plan.cow_src in published
+                assert plan.cow_src not in plan.new_pages
+            # prompt tokens under reuse_len really match a published chain
+            live_plans[next_slot] = plan
+            prompts[next_slot] = prompt
+            next_slot += 1
+        elif op < 0.85 and live_plans:  # finish: publish + release
+            slot = rng.choice(list(live_plans))
+            plan, prompt = live_plans.pop(slot), prompts.pop(slot)
+            publish_prefix(index, prompt, plan.pages)
+            release_pages(pool, plan.pages)
+        elif index is not None:  # eviction pressure
+            index.evict(rng.randint(1, 3))
+
+        # -- structural invariants after every operation -------------------
+        pool.check()
+        assert pool.refs == _refcount_model(pool, index, live_plans)
+
+    # drain: release everything, then evict the whole index
+    for slot in list(live_plans):
+        plan, prompt = live_plans.pop(slot), prompts.pop(slot)
+        publish_prefix(index, prompt, plan.pages)
+        release_pages(pool, plan.pages)
+    pool.check()
+    if index is not None:
+        index.evict(pool.capacity)
+        assert index.num_pages == 0
+    pool.check()
+    assert pool.used == 0, "pages leaked after full drain"
+
+
+def test_radix_match_and_cow_semantics():
+    """Deterministic radix behaviour: full-page chains match, divergence
+    yields a token-granular partial (COW) match, and reuse is capped below
+    the prompt length."""
+    pool = PagePool(16, 4)
+    index = RadixPrefixIndex(pool)
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8, 9]  # two full pages + one tail token
+    plan = plan_admission(pool, index, prompt, 12, share=True)
+    assert plan.reuse_len == 0 and plan.shared == [] and plan.cow_src is None
+    publish_prefix(index, prompt, plan.pages)
+    assert index.num_pages == 2  # only full prompt pages published
+
+    # identical prompt: both full pages shared, partial match on... nothing
+    # (the tail token is inside an unpublished page) — reuse = 8
+    plan2 = plan_admission(pool, index, prompt, 12, share=True)
+    assert plan2.reuse_len == 8 and len(plan2.shared) == 2
+    assert plan2.cow_src is None
+
+    # divergence inside page 2: first 6 tokens agree → 1 full page + COW(2)
+    plan3 = plan_admission(pool, index, [1, 2, 3, 4, 5, 6, 99, 98], 12, share=True)
+    assert plan3.reuse_len == 6 and len(plan3.shared) == 1
+    assert plan3.cow_src == plan.pages[1]
+    assert plan3.new_pages[0] != plan3.cow_src
+
+    # fully-cached page-aligned prompt: reuse capped at len(prompt) - 1, the
+    # last page is COW'd so its final token can be recomputed for logits
+    plan4 = plan_admission(pool, index, [1, 2, 3, 4, 5, 6, 7, 8], 12, share=True)
+    assert plan4.reuse_len == 7 and len(plan4.shared) == 1
+    assert plan4.cow_src == plan.pages[1]
+
+    for p in (plan, plan2, plan3, plan4):
+        release_pages(pool, p.pages)
+    pool.check()
+
+
+def test_eviction_respects_live_references():
+    """LRU eviction only reclaims pages whose sole reference is the index's;
+    pages aliased by a live plan survive any amount of pressure."""
+    pool = PagePool(8, 2)
+    index = RadixPrefixIndex(pool)
+    a = plan_admission(pool, index, [1, 2, 3, 4, 5], 6, share=True)
+    publish_prefix(index, [1, 2, 3, 4, 5], a.pages)
+    b = plan_admission(pool, index, [1, 2, 3, 4, 9], 6, share=True)
+    assert len(b.shared) == 2  # aliases a's published pages
+    release_pages(pool, a.pages)
+
+    index.evict(pool.capacity)  # maximal pressure
+    for pid in b.shared:
+        assert pool.refs[pid] >= 1, "evicted a page a live slot references"
+    pool.check()
+    release_pages(pool, b.pages)
+    index.evict(pool.capacity)
+    pool.check()
+    assert pool.used == 0
