@@ -13,13 +13,14 @@ import traceback
 
 from benchmarks import adaptive_sebs, fig1_util, fig2_optimal_batch, fig3_stagewise
 from benchmarks import kernel_bench, roofline_report, serve_prefix, serve_throughput
-from benchmarks import table1_updates
+from benchmarks import table1_updates, table_comm
 
 MODULES = {
     "fig1": fig1_util,
     "fig2": fig2_optimal_batch,
     "fig3": fig3_stagewise,
     "table1": table1_updates,
+    "table_comm": table_comm,
     "kernels": kernel_bench,
     "roofline": roofline_report,
     "adaptive": adaptive_sebs,

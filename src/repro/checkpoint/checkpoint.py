@@ -43,7 +43,11 @@ def _flatten(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
         for p in path:
             parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
         key = SEP.join(parts)
-        arr = np.asarray(leaf)
+        # device_get, not bare np.asarray: leaves living on a multi-device
+        # mesh (replicated on an elastic submesh, or rule-sharded storage)
+        # must be assembled into the single global host array — the
+        # serialized checkpoint is always the width-agnostic collapsed form
+        arr = np.asarray(jax.device_get(leaf))
         if arr.dtype.name == "bfloat16":
             dtypes[key] = "bfloat16"
             arr = arr.view(np.uint16)

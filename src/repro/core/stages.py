@@ -94,3 +94,13 @@ class StageController:
     def distinct_shapes(self) -> set:
         """(microbatch, accum) pairs → number of distinct compilations."""
         return {(p.microbatch, p.accum_steps) for p in self.plans()}
+
+    def stage_ladder(self) -> list[StepPlan]:
+        """First StepPlan of each stage, in stage order — the (batch,
+        accum) ladder a mesh planner widens along. One pass over the plan
+        stream, filtered to stage entries."""
+        out: list[StepPlan] = []
+        for p in self.plans():
+            if not out or p.stage != out[-1].stage:
+                out.append(p)
+        return out

@@ -22,6 +22,7 @@ final params to an uninterrupted run (see tests/test_resume.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -47,22 +48,30 @@ class TrainLog:
     batch_sizes: List[int] = field(default_factory=list)
     losses: List[float] = field(default_factory=list)
     noise_scales: List[float] = field(default_factory=list)
+    # CUMULATIVE communication counters at each logged update (per-device
+    # bytes moved by gradient/parameter synchronization, and the number of
+    # sync collectives issued). Populated by the elastic data-parallel
+    # trainer's CommAccountant (repro.distributed); the single-process
+    # trainer logs zeros. Cumulative so they survive checkpoint/resume
+    # without re-deriving per-interval deltas.
+    comm_bytes: List[int] = field(default_factory=list)
+    sync_events: List[int] = field(default_factory=list)
 
     def as_dict(self) -> Dict[str, list]:
         # copies, not views: checkpoint meta is serialized by an async
         # writer thread while the train loop keeps appending
-        return {
-            "steps": list(self.steps),
-            "samples": list(self.samples),
-            "stages": list(self.stages),
-            "batch_sizes": list(self.batch_sizes),
-            "losses": list(self.losses),
-            "noise_scales": list(self.noise_scales),
-        }
+        return {f.name: list(getattr(self, f.name)) for f in dataclasses.fields(self)}
 
     @classmethod
     def from_dict(cls, d: Dict[str, list]) -> "TrainLog":
-        return cls(**{k: list(v) for k, v in d.items()})
+        log = cls(**{f.name: list(d.get(f.name, [])) for f in dataclasses.fields(cls)})
+        # checkpoints written before the comm counters existed: pad to the
+        # logged length so the per-update alignment with `steps` holds
+        for name in ("comm_bytes", "sync_events"):
+            lst = getattr(log, name)
+            if len(lst) < len(log.steps):
+                lst.extend([0] * (len(log.steps) - len(lst)))
+        return log
 
 
 class SEBSTrainer:
@@ -93,6 +102,7 @@ class SEBSTrainer:
         # its state is checkpointed so consumers stay kill-equivalent too.
         self.host_rng = np.random.default_rng(seed)
         self._steps: Dict[tuple, Callable] = {}
+        self._last_saved: Optional[int] = None  # update index of the last checkpoint
 
     def _step_fn(self, plan: StepPlan) -> Callable:
         key = (plan.microbatch, plan.accum_steps)
@@ -130,7 +140,9 @@ class SEBSTrainer:
         }
         if hasattr(self.controller.schedule, "state"):
             meta["schedule"] = self.controller.schedule.state()
-        ckpt.save(update, {"train_state": state}, meta=meta)
+        meta.update(self._meta_extra())
+        ckpt.save(update, {"train_state": self._save_view(state)}, meta=meta)
+        self._last_saved = update
 
     def _restore(self, ckpt: CheckpointManager, state: TrainState,
                  log: TrainLog, gns: GradientNoiseScale):
@@ -148,9 +160,58 @@ class SEBSTrainer:
         if meta.get("schedule") is not None and hasattr(self.controller.schedule, "restore"):
             self.controller.schedule.restore(meta["schedule"])
         saved_log = TrainLog.from_dict(meta["log"])
-        for f in ("steps", "samples", "stages", "batch_sizes", "losses", "noise_scales"):
-            getattr(log, f)[:] = getattr(saved_log, f)
+        for f in dataclasses.fields(TrainLog):
+            getattr(log, f.name)[:] = getattr(saved_log, f.name)
+        self._restore_extra(meta)
         return state, int(meta["update"])
+
+    # -- subclass hooks (repro.distributed.ElasticTrainer) ------------------
+    #
+    # The run loop below is deliberately factored through these seams so the
+    # elastic data-parallel trainer can change *where* state lives (which
+    # mesh, replica-stacked or collapsed) and *when* it synchronizes,
+    # without duplicating the schedule/checkpoint/GNS plumbing. All hooks
+    # are identity/no-op here.
+
+    def _before_update(self, state: TrainState, plan: StepPlan) -> TrainState:
+        """Called before each update's batch is drawn (mesh transitions)."""
+        return state
+
+    def _place_batch(self, batch: dict, plan: StepPlan) -> dict:
+        """Shape + device placement of the raw pipeline batch."""
+        return self._shape_batch(batch, plan)
+
+    def _execute(self, state: TrainState, batch: dict, plan: StepPlan):
+        """Run one compiled optimizer update; returns (state, metrics)."""
+        step = self._step_fn(plan)
+        return step(state, batch, jnp.float32(plan.lr), jnp.int32(plan.stage))
+
+    def _after_update(self, state: TrainState, update: int, plan: StepPlan) -> TrainState:
+        """Called after each update (local-SGD averaging, comm accounting)."""
+        return state
+
+    def _comm_counters(self) -> tuple[int, int]:
+        """(cumulative bytes per device, cumulative sync events) for the log."""
+        return 0, 0
+
+    def _ready_to_save(self, update: int) -> bool:
+        """Whether the run state is checkpoint-consistent at this update
+        (local-SGD replicas are only consistent right after an average)."""
+        return True
+
+    def _save_view(self, state: TrainState) -> TrainState:
+        """The state tree to serialize (collapse replica-stacked layouts)."""
+        return state
+
+    def _finalize(self, state: TrainState) -> TrainState:
+        """Called once when the loop exits, before the farewell save."""
+        return state
+
+    def _meta_extra(self) -> dict:
+        return {}
+
+    def _restore_extra(self, meta: dict) -> None:
+        pass
 
     # -- the training loop --------------------------------------------------
 
@@ -177,6 +238,7 @@ class SEBSTrainer:
         log = TrainLog()
         gns = GradientNoiseScale()
         update = 0
+        save_pending = False
         if resume and checkpointer is not None:
             state, update = self._restore(checkpointer, state, log, gns)
         interrupted = False
@@ -189,13 +251,11 @@ class SEBSTrainer:
                 # real kill (simulated preemption)
                 interrupted = True
                 break
-            batch = self.pipeline.next_batch(plan.batch_size)
-            batch = self._shape_batch(batch, plan)
-            step = self._step_fn(plan)
-            state, metrics = step(
-                state, batch, jnp.float32(plan.lr), jnp.int32(plan.stage)
-            )
+            state = self._before_update(state, plan)
+            batch = self._place_batch(self.pipeline.next_batch(plan.batch_size), plan)
+            state, metrics = self._execute(state, batch, plan)
             update += 1
+            state = self._after_update(state, update, plan)
             loss = float(metrics["loss"])
             # adaptive schedules (core.noise_scale.AdaptiveSEBS) consume
             # the measured loss to decide stage transitions (Eq. 8 with
@@ -215,10 +275,25 @@ class SEBSTrainer:
                 log.batch_sizes.append(plan.batch_size)
                 log.losses.append(loss)
                 log.noise_scales.append(gns.b_noise)
-            if checkpointer is not None and save_every and update % save_every == 0:
-                self._save(checkpointer, update, state, log, gns)
+                comm_bytes, sync_events = self._comm_counters()
+                log.comm_bytes.append(comm_bytes)
+                log.sync_events.append(sync_events)
+            if checkpointer is not None and save_every:
+                # saves SNAP to the next checkpoint-consistent update rather
+                # than being dropped: local-SGD replicas are only consistent
+                # right after an average, and its cadence need not align
+                # with save_every
+                save_pending = save_pending or update % save_every == 0
+                if save_pending and self._ready_to_save(update):
+                    self._save(checkpointer, update, state, log, gns)
+                    save_pending = False
+        state = self._finalize(state)
         if checkpointer is not None:
-            if not interrupted and update and (not save_every or update % save_every):
+            # farewell save unless this exact update was already persisted
+            # (tracked explicitly: a periodic save can be SKIPPED when the
+            # state isn't replica-consistent, so `update % save_every` alone
+            # would lie about what reached disk)
+            if not interrupted and update and update != self._last_saved:
                 self._save(checkpointer, update, state, log, gns)  # final state
             checkpointer.wait()
         return state, log

@@ -1,0 +1,98 @@
+"""Live train-state resharding across elastic mesh transitions.
+
+Three layouts a TrainState can be in, and the moves between them:
+
+- *collapsed* — ordinary single-copy leaves (host numpy after a checkpoint
+  restore, or device arrays on whatever mesh last ran). The canonical
+  layout: checkpoints always serialize this form, which is what makes a
+  checkpoint written at width W restorable at any width W′.
+- *replicated on a width-W mesh* (exact mode) — :func:`reshard_state`
+  device_puts every leaf onto the target mesh, replicated by default or
+  rule-based via sharding/partitioning.py when the caller supplies the
+  model's logical param axes (divisibility fallback included). Placement
+  only: leaf VALUES are bit-identical before and after, always.
+- *replica-stacked* (local-SGD mode) — :func:`broadcast_state` adds a
+  leading (W,) replica axis sharded over "data"; :func:`collapse_state`
+  drops it. :func:`build_sync_step` averages float leaves across the
+  replica axis in-place (integer leaves — step counters, stage ids — are
+  identical across replicas by construction and pass through).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import shard_tree
+from repro.train.state import TrainState, state_axes
+
+
+def state_shardings(state: TrainState, mesh: Mesh, param_axes=None):
+    """NamedSharding tree for storing ``state`` on ``mesh`` between steps."""
+    if param_axes is None:
+        return jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    return shard_tree(state_axes(state, param_axes), state, mesh)
+
+
+def reshard_state(state: TrainState, mesh: Mesh = None, param_axes=None) -> TrainState:
+    """Move ``state`` onto ``mesh`` (default device when mesh is None).
+
+    Pure placement — the divisibility fallback in partitioning.py means a
+    rule that doesn't divide simply replicates, so resharding can never
+    change a value, only where its copies live."""
+    if mesh is None:
+        return jax.device_put(state)
+    return jax.device_put(state, state_shardings(state, mesh, param_axes))
+
+
+def broadcast_state(state: TrainState, width: int, mesh: Mesh) -> TrainState:
+    """Collapsed → replica-stacked: leading (width,) axis over "data"."""
+    sharding = NamedSharding(mesh, P("data"))
+
+    @partial(jax.jit, out_shardings=sharding)
+    def bc(s):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (width,) + x.shape), s
+        )
+
+    return bc(reshard_state(state, mesh))
+
+
+def collapse_state(stacked: TrainState) -> TrainState:
+    """Replica-stacked → collapsed (replica 0; call after an average)."""
+    return jax.tree.map(lambda x: x[0], stacked)
+
+
+def build_sync_step(mesh: Mesh):
+    """Jitted parameter average for local SGD: ``sync(stacked) -> stacked``.
+
+    Float leaves become the replica mean (re-broadcast to the stacked
+    layout so the training step's input spec is unchanged); integer leaves
+    take replica 0. One logical all-reduce of the state's float payload —
+    the ONLY communication local-SGD mode performs between stages."""
+    sharding = NamedSharding(mesh, P("data"))
+
+    def sync(stacked):
+        def avg(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                m = jnp.mean(x, axis=0, keepdims=True)
+            else:
+                m = x[:1]
+            return jnp.broadcast_to(m, x.shape)
+
+        return jax.tree.map(avg, stacked)
+
+    return jax.jit(sync, donate_argnums=(0,), out_shardings=sharding)
+
+
+def float_state_bytes(state: TrainState) -> int:
+    """Bytes of the float leaves of ``state`` — the local-SGD sync payload."""
+    return int(
+        sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves(state)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+        )
+    )

@@ -6,7 +6,11 @@ placeholder host devices are configured only by launch/dryrun.py).
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,6 +22,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """CPU-sized mesh for tests/examples."""
-    return jax.make_mesh((data, model), ("data", "model"))
+def make_host_mesh(data: int = 1, model: int = 1, pod: Optional[int] = None):
+    """CPU-sized mesh for tests/examples.
+
+    ``pod`` adds a leading pod axis (multi-pod data parallelism), so the
+    deferred-psum path across ("pod", "data") — one collective spanning
+    both axes per optimizer update — is exercisable on host devices under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. ``pod=None``
+    (default) keeps the historical 2-axis ("data", "model") mesh."""
+    if pod is None:
+        return jax.make_mesh((data, model), ("data", "model"))
+    return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+
+
+def make_data_mesh(width: int, devices: Optional[Sequence] = None) -> Mesh:
+    """1-axis ("data",) mesh over the first ``width`` devices.
+
+    The elastic data-parallel subsystem (repro.distributed) builds one of
+    these per SEBS stage width: early narrow stages leave the remaining
+    devices idle, later stages widen onto them. An explicit device subset —
+    not jax.make_mesh — so every width nests as a prefix of the same device
+    order (resharding between widths never permutes replicas)."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if not 1 <= width <= len(devices):
+        raise ValueError(f"width {width} not in [1, {len(devices)}]")
+    return Mesh(np.asarray(devices[:width]), ("data",))

@@ -14,6 +14,12 @@ schedule state) every N updates; ``--resume`` restarts from the latest
 checkpoint in the directory and is kill-equivalent — the resumed run's
 losses and final params are bit-identical to an uninterrupted run.
 ``--stop-after`` simulates a preemption for the CI resume smoke job.
+
+Elastic data parallelism: ``--dp-elastic`` hands the run to
+:class:`repro.distributed.ElasticTrainer` — the replica count follows the
+SEBS stage ladder up to ``--device-budget``, with ``--sync-mode exact``
+(bit-identical across widths) or ``--sync-mode local`` (local SGD,
+averaging cadence ``--local-interval``/``--local-growth``).
 """
 from __future__ import annotations
 
@@ -51,6 +57,22 @@ def main() -> None:
     ap.add_argument("--mode", default="accumulate", choices=["accumulate", "reshape"])
     ap.add_argument("--accum-mode", default="psum_each", choices=["psum_each", "deferred", "unrolled"])
     ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--dp-elastic", action="store_true",
+                    help="elastic data parallelism: the replica count follows the "
+                         "SEBS stage ladder (repro.distributed); on CPU combine with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8. "
+                         "Builds its own per-stage data submeshes (incompatible with "
+                         "--mesh) and implies accumulate/deferred execution "
+                         "(--mode/--accum-mode do not apply)")
+    ap.add_argument("--sync-mode", default="exact", choices=["exact", "local"],
+                    help="exact: one gradient collective per update, bit-identical "
+                         "across widths; local: local SGD with stage-keyed averaging")
+    ap.add_argument("--device-budget", type=int, default=None,
+                    help="max data-parallel width (default: all visible devices)")
+    ap.add_argument("--local-interval", type=int, default=4,
+                    help="local-SGD: updates between parameter averages at stage 0")
+    ap.add_argument("--local-growth", type=float, default=1.0,
+                    help="local-SGD: geometric growth of the averaging interval per stage")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (full run state, not just params)")
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -66,6 +88,9 @@ def main() -> None:
                     help="dump the train log (losses, stages, GNS trajectory) as JSON")
     ap.add_argument("--steps-log", type=int, default=5)
     args = ap.parse_args()
+
+    if args.dp_elastic and args.mesh != "none":
+        ap.error("--dp-elastic builds its own per-stage data submeshes; drop --mesh")
 
     mesh = None
     if args.mesh != "none":
@@ -88,10 +113,20 @@ def main() -> None:
                                 total=args.c1 * args.stages)
 
     ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
-    trainer = SEBSTrainer(
-        model, optimizer, schedule, DataPipeline(ds, mesh),
-        mesh=mesh, microbatch=args.b1, mode=args.mode, accum_mode=args.accum_mode,
-    )
+    if args.dp_elastic:
+        from repro.distributed import ElasticTrainer
+
+        trainer = ElasticTrainer(
+            model, optimizer, schedule, DataPipeline(ds),
+            microbatch=args.b1, sync_mode=args.sync_mode,
+            device_budget=args.device_budget,
+            local_interval=args.local_interval, local_growth=args.local_growth,
+        )
+    else:
+        trainer = SEBSTrainer(
+            model, optimizer, schedule, DataPipeline(ds, mesh),
+            mesh=mesh, microbatch=args.b1, mode=args.mode, accum_mode=args.accum_mode,
+        )
     params, _ = model.init(jax.random.key(0))
     state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
 
@@ -113,6 +148,11 @@ def main() -> None:
         log.info("update %4d samples %6d stage %d batch %4d loss %.4f",
                  tlog.steps[i], tlog.samples[i], tlog.stages[i],
                  tlog.batch_sizes[i], tlog.losses[i])
+    if args.dp_elastic:
+        acct = trainer.accountant
+        log.info("comm: %d sync events, %.2f MiB/device across stages %s",
+                 acct.total_sync_events, acct.total_bytes / 2**20,
+                 sorted(acct.per_stage))
     if checkpointer is not None:
         checkpointer.close()
         log.info("checkpoints under %s (latest: update %s)",

@@ -1,6 +1,8 @@
 from repro.sharding.partitioning import (
+    DATA_AXES,
     LOGICAL_RULES,
     logical_to_mesh_spec,
+    mesh_data_axes,
     named_sharding,
     shard_tree,
     constrain,
@@ -9,8 +11,10 @@ from repro.sharding.partitioning import (
 )
 
 __all__ = [
+    "DATA_AXES",
     "LOGICAL_RULES",
     "logical_to_mesh_spec",
+    "mesh_data_axes",
     "named_sharding",
     "shard_tree",
     "constrain",

@@ -59,6 +59,19 @@ LOGICAL_RULES: dict[str, Tuple[str, ...]] = {
 }
 
 
+# Mesh axes that carry data parallelism, in nesting order. Single source of
+# truth for batch placement (batch_spec), the deferred-psum train step, and
+# the elastic DP subsystem (repro.distributed).
+DATA_AXES: Tuple[str, ...] = ("pod", "data")
+
+
+def mesh_data_axes(mesh) -> Tuple[str, ...]:
+    """The subset of DATA_AXES present on ``mesh`` (possibly empty)."""
+    if mesh is None:
+        return ()
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
 # Pre-axis_types jax cannot see shard_map manual axes on the mesh object;
 # the legacy _shard_map wrapper (train/step.py) declares them here instead.
 _LEGACY_MANUAL_AXES: set = set()
@@ -202,7 +215,7 @@ def batch_spec(mesh: Mesh, extra_dims: int = 1, batch_size: Optional[int] = None
 
     With ``batch_size`` given, applies the divisibility fallback (greedy
     prefix of the data axes; batch=1 long-context decode → replicated)."""
-    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    axes = list(mesh_data_axes(mesh))
     if batch_size is not None:
         sizes = _mesh_axis_sizes(mesh)
         keep, prod = [], 1

@@ -25,15 +25,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.sharding import batch_spec, named_sharding
+from repro.sharding import batch_spec, mesh_data_axes, named_sharding
 from repro.train.loss import lm_loss
 from repro.train.state import TrainState, is_axes_leaf, state_axes
 from repro.utils.tree import tree_add, tree_scale
 
 
-def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
+def shard_map_manual(f, mesh, in_specs, out_specs, manual_axes):
     """Version-portable shard_map: manual over ``manual_axes`` only (the
-    model axis stays automatic), no replication/VMA checking."""
+    model axis stays automatic), no replication/VMA checking.
+
+    Shared by the deferred-psum train step below and the elastic
+    data-parallel steps in ``repro.distributed.step``."""
     if hasattr(jax, "shard_map"):  # jax >= 0.6
         return jax.shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
@@ -55,7 +58,11 @@ def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
     )
 
 
-def _clip(grads, max_norm: float):
+# legacy alias (pre-PR-5 name)
+_shard_map = shard_map_manual
+
+
+def clip_by_global_norm(grads, max_norm: float):
     if not max_norm:
         return grads, jnp.zeros((), jnp.float32)
     norm = jnp.sqrt(
@@ -63,6 +70,9 @@ def _clip(grads, max_norm: float):
     )
     scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
     return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_clip = clip_by_global_norm
 
 
 def _grads_over_microbatches(model, params, batch, accum_steps, z_loss, vary_axes=()):
@@ -131,7 +141,7 @@ def build_train_step(
     if mode == "unrolled" and accum_steps > 1:
         accum_steps = -accum_steps  # flag for the unrolled python loop
         mode = "psum_each"
-    batch_axes = tuple(a for a in ("pod", "data") if mesh is not None and a in mesh.axis_names)
+    batch_axes = mesh_data_axes(mesh)
 
     def apply_update(state: TrainState, grads, lr, stage):
         grads, gnorm = _clip(grads, grad_clip)

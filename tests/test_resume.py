@@ -184,6 +184,78 @@ def test_gns_state_roundtrip():
     assert clone.b_noise == gns.b_noise  # identical continuation
 
 
+_ELASTIC_RESUME_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import SEBS
+from repro.data import DataPipeline, TokenDataset
+from repro.distributed import ElasticTrainer
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+
+cfg = get_config("qwen2.5-3b", "smoke").replace(compute_dtype="float32")
+model = build_model(cfg)
+
+def make(budget):
+    opt = make_optimizer("momentum", beta=0.9)
+    schedule = SEBS(b1=4, C1=16, rho=2.0, num_stages=3, eta=0.05)
+    ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=8, seed=0)
+    tr = ElasticTrainer(model, opt, schedule, DataPipeline(ds), microbatch=4,
+                        grad_clip=1.0, device_budget=budget)
+    params, _ = model.init(jax.random.key(0))
+    return tr, TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+def pbytes(s):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(s.params)]
+
+tr, st = make(1)
+ref, reflog = tr.run(st, log_every=1)
+refp = pbytes(ref)
+
+# property over kill points and both width directions: k=3 dies in the
+# narrow stage (checkpoint predates any width change), k=9 dies in the
+# widest stage (checkpoint was WRITTEN at width > 1)
+for k, w_kill, w_resume in ((3, 2, 4), (9, 2, 4), (9, 4, 2)):
+    with tempfile.TemporaryDirectory() as td:
+        tr1, st1 = make(w_kill)
+        with CheckpointManager(td, keep_last=2) as ck:
+            tr1.run(st1, log_every=1, checkpointer=ck, save_every=2,
+                    stop_after_updates=k)
+        tr2, st2 = make(w_resume)
+        with CheckpointManager(td, keep_last=2) as ck2:
+            fin, log = tr2.run(st2, log_every=1, checkpointer=ck2,
+                               save_every=2, resume=True)
+    assert log.losses == reflog.losses, (k, w_kill, w_resume)
+    assert log.stages == reflog.stages and log.batch_sizes == reflog.batch_sizes
+    assert pbytes(fin) == refp, (k, w_kill, w_resume)
+    assert log.comm_bytes[-1] > 0 and log.sync_events[-1] > 0
+print("ELASTIC_RESUME_OK")
+"""
+
+
+def test_elastic_resume_across_widths():
+    """Elastic kill-equivalence: a run killed at update k under device
+    budget W and resumed under budget W' (2->4 and 4->2) reproduces the
+    uninterrupted width-1 run's losses and final params bit-for-bit —
+    checkpoints are width-agnostic and the exact-sync reduction tree is
+    width-invariant (see repro/distributed/__init__.py)."""
+    import subprocess
+    import sys as _sys
+
+    res = subprocess.run(
+        [_sys.executable, "-c", _ELASTIC_RESUME_SCRIPT],
+        capture_output=True, text=True, cwd=".",
+    )
+    assert "ELASTIC_RESUME_OK" in res.stdout, res.stdout + res.stderr
+
+
 def test_adaptive_sebs_state_roundtrip():
     sched = AdaptiveSEBS(b1=8, eta=0.1, total=10_000, rho_max=4.0,
                          min_stage_samples=100, smooth=0.0)
