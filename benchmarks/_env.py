@@ -1,0 +1,99 @@
+"""Shared benchmark env hygiene — apply() BEFORE the first ``import jax``.
+
+CPU wall-clock numbers only gate a regression when the process environment
+is pinned; this module centralizes the knobs (the same set the HomebrewNLP
+run script exports around its TPU launches: host-device-count flag,
+allocator report threshold, log squelch, x64 off) plus BLAS/OpenMP thread
+pinning so a run isn't silently faster because a second benchmark left an
+oversubscribed threadpool behind.
+
+Everything is ``setdefault`` — an explicit env var from the caller (CI job,
+operator) always wins. ``LD_PRELOAD``-ing tcmalloc cannot be done from
+inside a running process, so it is NOT set here; the CI job exports it when
+the library exists.
+
+``fingerprint()`` returns the applied knobs plus runtime facts (jax
+version, backend, device kind, cpu count) and is embedded in every
+``BENCH_*.json`` so a diff can tell "code got slower" apart from "the
+machine changed".
+"""
+from __future__ import annotations
+
+import os
+import platform
+import sys
+from typing import Any, Dict
+
+# knobs applied by apply(); order matters only for XLA_FLAGS merging
+_DEFAULTS = {
+    # benchmarks gate CPU numbers; an accelerator run overrides explicitly
+    "JAX_PLATFORMS": "cpu",
+    # silence TF/XLA banner noise that skews first-call timings via stderr IO
+    "TF_CPP_MIN_LOG_LEVEL": "4",
+    # fp32 everywhere — accidental x64 doubles both flops and bytes
+    "JAX_ENABLE_X64": "0",
+    # one BLAS/OpenMP worker per pool: XLA's own intra-op threadpool is the
+    # parallelism we are measuring; nested pools add run-to-run jitter
+    "OMP_NUM_THREADS": "1",
+    "OPENBLAS_NUM_THREADS": "1",
+    "MKL_NUM_THREADS": "1",
+    # only relevant when tcmalloc is preloaded (CI does); harmless otherwise
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+}
+
+# XLA_FLAGS entries are merged, not clobbered: benchmarks pin the host
+# platform to ONE device unless the caller already forced a count
+# (distributed benches and dryrun own their own multi-device setup)
+_XLA_DEFAULT_FLAGS = {"--xla_force_host_platform_device_count": "1"}
+
+_applied: Dict[str, str] = {}
+
+
+def jax_already_imported() -> bool:
+    return "jax" in sys.modules
+
+
+def apply() -> Dict[str, str]:
+    """Pin the process env for stable CPU benchmarking; returns the knobs
+    actually applied (existing values win). Must run before jax import —
+    if jax is already in, the env is recorded as-is and a ``late`` marker
+    is added so the fingerprint makes the hazard visible."""
+    late = jax_already_imported()
+    for key, val in _DEFAULTS.items():
+        if not late:
+            os.environ.setdefault(key, val)
+        _applied[key] = os.environ.get(key, "")
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if not late:
+        for flag, val in _XLA_DEFAULT_FLAGS.items():
+            if flag not in flags:
+                flags = (flags + f" {flag}={val}").strip()
+        os.environ["XLA_FLAGS"] = flags
+    _applied["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "")
+    if late:
+        _applied["late"] = "jax imported before _env.apply(); env not pinned"
+    return dict(_applied)
+
+
+def fingerprint() -> Dict[str, Any]:
+    """Env + runtime facts for the BENCH artifact. Safe to call whether or
+    not jax ended up importable."""
+    fp: Dict[str, Any] = {
+        "applied": dict(_applied) or {
+            k: os.environ.get(k, "") for k in list(_DEFAULTS) + ["XLA_FLAGS"]
+        },
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+
+        fp["jax_version"] = jax.__version__
+        fp["backend"] = jax.default_backend()
+        fp["device_kind"] = jax.devices()[0].device_kind
+        fp["num_devices"] = jax.device_count()
+    except Exception as e:  # noqa: BLE001 — fingerprint must never fail a run
+        fp["jax_version"] = f"unavailable: {e!r}"
+    return fp

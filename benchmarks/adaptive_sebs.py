@@ -9,11 +9,13 @@ from __future__ import annotations
 
 import json
 import os
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from repro.core import SEBS, AdaptiveSEBS, ClassicalStagewise, StageController
 from repro.data import QuadraticProblem
 from repro.optim import make_optimizer
@@ -38,7 +40,7 @@ def _run(schedule, qp, w0, seed=0):
     return w["w"], updates, ctl
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     qp = QuadraticProblem(n=5000, d=50, seed=0)
     rng = np.random.default_rng(1)
     w0 = qp.w_star + 4.0 * rng.standard_normal(qp.d).astype(np.float32) / np.sqrt(qp.d)
@@ -46,7 +48,8 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     eta = 1.0 / (2 * qp.L)
     total = 28_000
 
-    rows, results = [], {}
+    records: List[Record] = []
+    results = {}
     runs = {
         "classical": ClassicalStagewise(b=8, C1=4000, rho=4.0, num_stages=3, eta1=eta),
         "sebs_rho4": SEBS(b1=8, C1=4000, rho=4.0, num_stages=3, eta=eta),
@@ -59,15 +62,22 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
         growth = getattr(sched, "history", None)
         results[name] = {"updates": updates, "final_err": err,
                          "stages": [h for h in growth] if growth else None}
-        rows.append((f"adaptive_{name}", 0.0,
-                     f"updates={updates} final_err={err:.4f}"
-                     + (f" batch_path={[h['batch'] for h in growth]}" if growth else "")))
+        derived = (f"updates={updates} final_err={err:.4f}"
+                   + (f" batch_path={[h['batch'] for h in growth]}" if growth else ""))
+        ctx = {"batch_path": [h["batch"] for h in growth]} if growth else {}
+        records.append(Record(
+            f"adaptive_{name}_updates", updates, "count", direction="exact",
+            derived=derived, context=ctx,
+        ))
+        records.append(Record(
+            f"adaptive_{name}_final_err", err, "loss_gap", direction="lower",
+            derived=derived, context=ctx,
+        ))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "adaptive_sebs.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)
-    return rows
+    return records
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    print_csv(run())

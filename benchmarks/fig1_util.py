@@ -11,10 +11,12 @@ from __future__ import annotations
 import json
 import os
 import time
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks._schema import Record, print_csv
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim import make_optimizer
@@ -25,7 +27,7 @@ BATCHES = [1, 2, 4, 8, 16, 32]
 SEQ = 64
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     cfg = get_config("qwen2.5-3b", "smoke")
     model = build_model(cfg)
     opt = make_optimizer("momentum")
@@ -48,13 +50,18 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     with open(os.path.join(out_dir, "fig1_util.json"), "w") as f:
         json.dump(per_sample_us, f, indent=1)
     speedup = per_sample_us[1] / per_sample_us[max(BATCHES)]
-    return [(
-        "fig1_time_per_sample", per_sample_us[max(BATCHES)],
+    derived = (
         f"us/sample by batch={ {k: round(v,1) for k,v in per_sample_us.items()} }; "
-        f"b=1→b={max(BATCHES)} speedup {speedup:.2f}x",
-    )]
+        f"b=1→b={max(BATCHES)} speedup {speedup:.2f}x"
+    )
+    ctx = {"per_sample_us": {str(k): v for k, v in per_sample_us.items()}, "seq": SEQ}
+    return [
+        Record("fig1_time_per_sample_bmax", per_sample_us[max(BATCHES)],
+               "us/sample", direction="lower", derived=derived, context=ctx),
+        Record("fig1_batch_speedup", speedup, "ratio", direction="higher",
+               derived=derived, context=ctx),
+    ]
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    print_csv(run())

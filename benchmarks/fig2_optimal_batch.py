@@ -12,11 +12,13 @@ from __future__ import annotations
 import functools
 import json
 import os
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from repro.data.synthetic import QuadraticProblem
 
 BATCHES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
@@ -49,14 +51,14 @@ def _run_sgd(key, data, diag, w_star, x_gap, lr, *, b, M, d, n):
     return jax.vmap(one)(jax.random.split(key, REPEATS))
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     qp = QuadraticProblem(n=10_000, d=100)
     data = jnp.asarray(qp.data)
     diag = jnp.asarray(qp.diag)
     w_star = jnp.asarray(qp.w_star)
     C = qp.n
     results = {}
-    rows = []
+    records: List[Record] = []
     for lr in (0.005, 0.01):
         optimal = {}
         for x in XS:
@@ -72,15 +74,27 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
         # check b* ∝ 1/x: correlation of log(b*) vs -log(x)
         xs = np.array(sorted(optimal))
         bs = np.array([optimal[x] for x in xs], float)
-        corr = float(np.corrcoef(np.log(xs), np.log(bs))[0, 1])
-        rows.append((f"fig2_optimal_batch_lr{lr}", 0.0,
-                     f"b*(x)={optimal}; corr(log b*, log x)={corr:.3f}"))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            corr = float(np.corrcoef(np.log(xs), np.log(bs))[0, 1])
+        # Eq. 5 predicts b* ∝ 1/x, i.e. corr(log b*, log x) near -1; more
+        # negative is better. A constant b* path makes corr undefined — keep
+        # the record but only gate on it when the correlation exists.
+        degenerate = not np.isfinite(corr)
+        records.append(Record(
+            f"fig2_optimal_batch_lr{lr}_corr",
+            0.0 if degenerate else corr,
+            "corr",
+            direction="info" if degenerate else "lower",
+            derived=(f"b*(x)={optimal}; corr(log b*, log x)="
+                     + ("undefined (constant b*)" if degenerate else f"{corr:.3f}")),
+            context={"optimal_batch": {str(k): v for k, v in optimal.items()},
+                     "lr": lr, "degenerate": degenerate},
+        ))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig2_optimal_batch.json"), "w") as f:
         json.dump({str(k): v for k, v in results.items()}, f, indent=1)
-    return rows
+    return records
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    print_csv(run())

@@ -14,12 +14,13 @@ from __future__ import annotations
 import functools
 import json
 import os
-from typing import Callable
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from repro.core.schedules import DBSGD, EpochStagewise, WarmupConstant
 from repro.core.stages import StageController
 from repro.data.synthetic import ImageClassDataset
@@ -122,23 +123,32 @@ def methods():
     }
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     results = {}
-    rows = []
+    records: List[Record] = []
     for name, (schedule, opt_name, opt_kwargs) in methods().items():
         res = _train(schedule, opt_name, opt_kwargs)
         results[name] = res
-        rows.append(
-            (f"fig3_{name}", 0.0,
-             f"updates={res['updates']} test_acc={res['test_acc']:.4f} "
-             f"final_loss={res['log']['loss'][-1]:.4f}")
-        )
+        derived = (f"updates={res['updates']} test_acc={res['test_acc']:.4f} "
+                   f"final_loss={res['log']['loss'][-1]:.4f}")
+        ctx = {"optimizer": opt_name, "b1": B1, "rho": RHO, "epochs": EPOCHS}
+        records.append(Record(
+            f"fig3_{name}_updates", res["updates"], "count", direction="exact",
+            derived=derived, context=ctx,
+        ))
+        records.append(Record(
+            f"fig3_{name}_test_acc", res["test_acc"], "ratio",
+            direction="higher", derived=derived, context=ctx,
+        ))
+        records.append(Record(
+            f"fig3_{name}_final_loss", res["log"]["loss"][-1], "nats",
+            direction="lower", derived=derived, context=ctx,
+        ))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig3_stagewise.json"), "w") as f:
         json.dump(results, f, indent=1)
-    return rows
+    return records
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    print_csv(run())

@@ -9,11 +9,13 @@ sweep pass/fail plus the analytic VMEM footprint of their BlockSpecs.
 from __future__ import annotations
 
 import time
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gla.ops import gla_chunked
@@ -30,8 +32,8 @@ def _time(fn, *args, n=3):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
-    rows = []
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
+    records: List[Record] = []
     # dense vs chunked attention (pure jnp), B=2 S=2048 H=4 D=64
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (2, 2048, 4, 64), jnp.float32)
@@ -39,15 +41,24 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     v = jax.random.normal(ks[2], (2, 2048, 4, 64), jnp.float32)
     dense = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
     t_dense = _time(dense, q, k, v)
-    rows.append(("attention_dense_jnp_s2048", t_dense, "O(S^2) logits materialized"))
+    records.append(Record(
+        "attention_dense_jnp_s2048", t_dense, "us/call", direction="lower",
+        derived="O(S^2) logits materialized",
+        context={"batch": 2, "seq": 2048, "heads": 4, "head_dim": 64},
+    ))
 
     # flash kernel correctness sweep (interpret)
     out = flash_attention(q[:, :256], k[:, :256], v[:, :256], causal=True)
     ref = attention_ref(q[:, :256], k[:, :256], v[:, :256], causal=True)
     err = float(jnp.abs(out - ref).max())
     vmem_kb = (128 * 64 * 3 + 128 * 64 + 128 * 2) * 4 / 1024  # q,k,v blocks + acc
-    rows.append(("flash_kernel_interpret_check", 0.0,
-                 f"max_err={err:.1e} blockspec_vmem~{vmem_kb:.0f}KiB"))
+    records.append(Record(
+        "flash_kernel_interpret_max_err", err, "max_abs_err", direction="lower",
+        derived=f"max_err={err:.1e} blockspec_vmem~{vmem_kb:.0f}KiB",
+        # fp noise moves tiny errors by large relative factors; gate only
+        # on an order-of-magnitude blowup (a real numerics regression)
+        context={"blockspec_vmem_kib": vmem_kb, "seq": 256, "tolerance": 9.0},
+    ))
 
     # GLA: naive scan vs chunked-checkpoint jnp vs kernel correctness
     B, S, H, K, V = 2, 1024, 4, 32, 64
@@ -58,14 +69,21 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     glw = -jnp.abs(jax.random.normal(ks[3], (B, S, H, K)))
     scan_fn = jax.jit(lambda *a: gla_ref(*a)[0])
     t_scan = _time(scan_fn, gq, gk, gv, glw)
-    rows.append(("gla_seq_scan_jnp_s1024", t_scan, "per-step recurrence (production lowering path)"))
+    records.append(Record(
+        "gla_seq_scan_jnp_s1024", t_scan, "us/call", direction="lower",
+        derived="per-step recurrence (production lowering path)",
+        context={"batch": B, "seq": S, "heads": H, "key_dim": K, "value_dim": V},
+    ))
     yk, fk = gla_chunked(gq, gk, gv, glw, chunk=128)
     yr, fr = gla_ref(gq, gk, gv, glw)
     err = float(jnp.abs(yk - yr).max())
-    rows.append(("gla_kernel_interpret_check", 0.0, f"max_err={err:.1e} chunk=128"))
-    return rows
+    records.append(Record(
+        "gla_kernel_interpret_max_err", err, "max_abs_err", direction="lower",
+        derived=f"max_err={err:.1e} chunk=128",
+        context={"chunk": 128, "tolerance": 9.0},
+    ))
+    return records
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    print_csv(run())

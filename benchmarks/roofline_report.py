@@ -1,16 +1,45 @@
 """Aggregate the dry-run + roofline JSONs into the §Dry-run / §Roofline
-tables (markdown written to benchmarks/results/, rows returned as CSV)."""
+tables (markdown written to benchmarks/results/, schema records returned).
+
+The roofline inputs are produced out-of-band (they compile production-mesh
+companions on 512 placeholder devices, which cannot run inside an
+already-initialized benchmark process):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out benchmarks/results/dryrun
+    PYTHONPATH=src python -m repro.roofline.run --out benchmarks/results/roofline
+
+When NO roofline artifact exists this module FAILS LOUDLY instead of
+reporting "0 arch×shape rooflines" with exit 0 (the old silent-truncation
+bug: an empty directory read as coverage). ``--allow-missing`` (or
+``benchmarks.run --allow-missing``, or ``BENCH_ALLOW_MISSING=1``) degrades
+the failure to an explicit ``roofline_combos_skipped`` record; partially
+missing combos are always enumerated on stderr and in the record context —
+never silently dropped.
+"""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+from typing import List
 
+from benchmarks._schema import Record, print_csv
 from repro.configs import INPUT_SHAPES, list_archs
 from repro.configs.shapes import shape_applicable
 
 DRYRUN_DIR = "benchmarks/results/dryrun"
 ROOFLINE_DIR = "benchmarks/results/roofline"
+
+# flipped by ``benchmarks.run --allow-missing``; env var covers standalone use
+ALLOW_MISSING = os.environ.get("BENCH_ALLOW_MISSING", "") not in ("", "0")
+
+_REGEN_HINT = (
+    f"generate them with: PYTHONPATH=src python -m repro.launch.dryrun --all "
+    f"--out {DRYRUN_DIR} && PYTHONPATH=src python -m repro.roofline.run "
+    f"--out {ROOFLINE_DIR}"
+)
 
 
 def _load(path):
@@ -18,27 +47,52 @@ def _load(path):
         return json.load(f)
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
-    rows = []
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
+    records: List[Record] = []
     md = ["| arch | shape | dominant | compute_s | memory_s | collective_s | useful | peak GB/dev |",
           "|---|---|---|---|---|---|---|---|"]
-    n_done = 0
+    done, skipped = [], []
     for arch in list_archs():
         for shape in INPUT_SHAPES:
             if not shape_applicable(arch, shape):
                 continue
-            p = os.path.join(ROOFLINE_DIR, f"{arch}_{shape}.json")
+            combo = f"{arch}_{shape}"
+            p = os.path.join(ROOFLINE_DIR, f"{combo}.json")
             if not os.path.exists(p):
+                skipped.append(combo)
                 continue
             d = _load(p)
             t = d["terms"]
-            peak = d["memory_per_device"]["peak_bytes_per_device"] / 2**30
+            peak_gb = d["memory_per_device"]["peak_bytes_per_device"] / 2**30
             md.append(
                 f"| {arch} | {shape} | {t['dominant']} | {t['compute_s']:.4f} | "
                 f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
-                f"{d['useful_ratio']:.2f} | {peak:.1f} |"
+                f"{d['useful_ratio']:.2f} | {peak_gb:.1f} |"
             )
-            n_done += 1
+            ctx = {"dominant": t["dominant"], "compute_s": t["compute_s"],
+                   "memory_s": t["memory_s"], "collective_s": t["collective_s"]}
+            records.append(Record(
+                f"roofline_{combo}_useful_ratio", d["useful_ratio"], "ratio",
+                direction="higher",
+                derived=f"dominant={t['dominant']} useful={d['useful_ratio']:.2f}",
+                context=ctx,
+            ))
+            records.append(Record(
+                f"roofline_{combo}_peak_gb_per_device", peak_gb, "GB",
+                direction="lower", context=ctx,
+            ))
+            done.append(combo)
+
+    if not done:
+        msg = (f"no roofline artifacts under {ROOFLINE_DIR} "
+               f"({len(skipped)} applicable arch×shape combos); {_REGEN_HINT}")
+        if not ALLOW_MISSING:
+            raise FileNotFoundError(msg)
+        print(f"# roofline SKIPPED: {msg}", file=sys.stderr)
+    elif skipped:
+        print(f"# roofline: {len(skipped)} combos missing an artifact: "
+              f"{', '.join(skipped)}", file=sys.stderr)
+
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
         f.write("\n".join(md) + "\n")
@@ -48,12 +102,34 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
         for k in pods:
             if p.endswith(k + ".json"):
                 pods[k] += 1
-    rows.append(("roofline_combos_analyzed", 0.0, f"{n_done} arch×shape rooflines"))
-    rows.append(("dryrun_combos_compiled", 0.0,
-                 f"single-pod={pods['pod1']} multi-pod={pods['pod2']}"))
-    return rows
+    records.append(Record(
+        "roofline_combos_analyzed", len(done), "count", direction="exact",
+        derived=f"{len(done)} arch×shape rooflines",
+        context={"analyzed": done},
+    ))
+    records.append(Record(
+        "roofline_combos_skipped", len(skipped), "count", direction="lower",
+        derived=f"{len(skipped)} combos missing artifacts"
+                + (" (allowed by --allow-missing)" if skipped else ""),
+        # any growth in skips is a coverage loss; zero band
+        context={"skipped": skipped, "tolerance": 0.0},
+    ))
+    records.append(Record(
+        "dryrun_combos_compiled", pods["pod1"] + pods["pod2"], "count",
+        direction="exact",
+        derived=f"single-pod={pods['pod1']} multi-pod={pods['pod2']}",
+        context=pods,
+    ))
+    return records
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(",".join(map(str, r)))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="report missing roofline inputs as an explicit skip "
+                         "record instead of failing")
+    args = ap.parse_args()
+    ALLOW_MISSING = ALLOW_MISSING or args.allow_missing
+    print_csv(run())

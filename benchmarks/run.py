@@ -1,16 +1,33 @@
 """Benchmark harness — one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
-Prints ``name,us_per_call,derived`` CSV; detailed artifacts under
-benchmarks/results/.
+
+Per module this
+
+- prints ``name,value,unit,derived`` CSV (the unit travels with every row —
+  µs/call and µs/token no longer share a column under one header),
+- writes the canonical ``BENCH_<module>.json`` perf-trajectory artifact at
+  the repo root (schema: :mod:`benchmarks._schema`; diffed against
+  ``benchmarks/baselines/`` by :mod:`benchmarks.compare`),
+- keeps the detailed human-readable JSON/markdown under
+  ``benchmarks/results/``.
+
+Env hygiene (:mod:`benchmarks._env`) is applied before jax is imported so
+CPU numbers are stable enough to gate on.
 """
 from __future__ import annotations
+
+from benchmarks import _env
+
+_env.apply()  # must precede any jax-importing module below
 
 import argparse
 import sys
 import time
 import traceback
+from typing import List, Optional
 
+from benchmarks import _schema
 from benchmarks import adaptive_sebs, fig1_util, fig2_optimal_batch, fig3_stagewise
 from benchmarks import kernel_bench, roofline_report, serve_prefix, serve_throughput
 from benchmarks import table1_updates, table_comm
@@ -28,22 +45,40 @@ MODULES = {
     "serve_prefix": serve_prefix,
 }
 
+# the CI bench-trajectory subset: cheap enough for every PR, covers comm
+# accounting, kernel timings, and both serving engines
+CHEAP_SUBSET = ("table_comm", "kernels", "serve", "serve_prefix")
 
-def main() -> None:
+
+def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
-    args = ap.parse_args()
+    ap.add_argument("--out-root", default=_schema.REPO_ROOT,
+                    help="directory for BENCH_<module>.json artifacts")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="let roofline_report degrade to an explicit skip "
+                         "instead of failing when its input artifacts are absent")
+    args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(MODULES)
-    print("name,us_per_call,derived")
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        raise SystemExit(f"unknown benchmark module(s): {unknown}; "
+                         f"known: {sorted(MODULES)}")
+    roofline_report.ALLOW_MISSING = roofline_report.ALLOW_MISSING or args.allow_missing
+    env = _env.fingerprint()
+    print(_schema.CSV_HEADER)
     failures = []
     for name in names:
         t0 = time.time()
         try:
-            for row in MODULES[name].run():
-                print(",".join(str(x) for x in row), flush=True)
+            records = _schema.as_records(MODULES[name].run())
+            for rec in records:
+                print(rec.csv_row(), flush=True)
+            path = _schema.write_bench(name, records, args.out_root, env)
+            print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failures.append(name)
-            print(f"{name},0,FAILED: {e!r}", flush=True)
+            print(f"{name},0,none,FAILED: {e!r}", flush=True)
             traceback.print_exc(limit=6)
         print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
     if failures:

@@ -21,10 +21,12 @@ Usage: ``PYTHONPATH=src python -m benchmarks.serve_prefix`` (or via
 from __future__ import annotations
 
 import time
+from typing import List
 
 import jax
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from benchmarks.serve_throughput import PERCENTILE_METHOD, _dump, _pct
 from repro.configs import get_config
 from repro.models import build_model
@@ -83,7 +85,7 @@ def _make(kind, model, params):
     )
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     cfg = get_config(ARCH, "smoke")
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
@@ -101,30 +103,24 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     for a, b in zip(outs["dense"], outs["paged"]):
         np.testing.assert_array_equal(a, b)
 
-    rows = []
+    records: List[Record] = []
     details = {"percentile_method": PERCENTILE_METHOD, "results": []}
     for kind, engine in warm.items():
-        # reset ramp + stats, keep the engine's compiled steps (and, for the
-        # paged engine, its already-published prefix pages — steady state)
-        engine.admission.stage = 0
-        engine.admission._pressure = 0
-        engine.stats.update(
-            ticks=0, decoded_tokens=0, peak_width=0, prefill_chunks=0,
-            prefill_tokens_computed=0, prefix_tokens_reused=0,
-            prompt_tokens_total=0, cow_copies=0,
-        )
-        if kind == "paged":
-            # pool.peak_used is monotonic; rebase it so the reported KV
-            # high-water mark belongs to the timed drain, not the cold warmup
-            engine.pool.peak_used = engine.pool.used
+        # restart the ramp and zero every counter through the public seams;
+        # compiled steps stay warm and the paged engine keeps its published
+        # prefix pages (steady state) while rebasing the KV high-water mark
+        # so the reported peak belongs to the timed drain, not the warmup
+        engine.admission.reset()
+        engine.reset_stats()
         _, _, elapsed, lat = _drain(engine, prompts)
         tps = total_new / elapsed
+        p50, p99 = _pct(lat, 50), _pct(lat, 99)
         entry = {
             "engine": kind,
             "requests": len(prompts),
             "tok_per_s": tps,
-            "latency_p50_s": _pct(lat, 50),
-            "latency_p99_s": _pct(lat, 99),
+            "latency_p50_s": p50,
+            "latency_p99_s": p99,
             "prompt_tokens_total": total_prompt,
         }
         if kind == "paged":
@@ -159,17 +155,47 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
                 f"kv_peak={kv_dense // 1024}KiB"
             )
         details["results"].append(entry)
-        rows.append(
-            (f"serve_prefix_{kind}", round(elapsed / total_new * 1e6, 1), derived)
-        )
+        ctx = {
+            "arch": ARCH, "requests": len(prompts), "new_tokens": NEW_TOKENS,
+            "percentile_method": PERCENTILE_METHOD,
+        }
+        records.append(Record(
+            f"serve_prefix_{kind}_tok_per_s", tps, "tok/s",
+            direction="higher", derived=derived, context=ctx,
+        ))
+        records.append(Record(
+            f"serve_prefix_{kind}_us_per_token",
+            round(elapsed / total_new * 1e6, 1), "us/token",
+            direction="lower", derived=derived, context=ctx,
+        ))
+        records.append(Record(
+            f"serve_prefix_{kind}_latency_p99", p99, "s",
+            direction="lower", context=ctx,
+        ))
+        # deterministic memory/compute accounting of the drain: any change
+        # is a behavioral change in the paging/prefix machinery, gate exact
+        records.append(Record(
+            f"serve_prefix_{kind}_prefill_tokens_computed",
+            entry["prefill_tokens_computed"], "tokens", direction="exact",
+            context={"prompt_tokens_total": total_prompt},
+        ))
+        records.append(Record(
+            f"serve_prefix_{kind}_kv_bytes_peak", entry["kv_bytes_peak"],
+            "bytes", direction="exact",
+        ))
+        if kind == "paged":
+            records.append(Record(
+                "serve_prefix_paged_hit_rate", mem["prefix_hit_rate"], "ratio",
+                direction="higher",
+                context={"reused": engine.stats["prefix_tokens_reused"],
+                         "total": engine.stats["prompt_tokens_total"]},
+            ))
     _dump(details, out_dir, "serve_prefix.json")
-    return rows
+    return records
 
 
 def main() -> None:
-    print("name,us_per_token,derived")
-    for row in run():
-        print(",".join(str(x) for x in row))
+    print_csv(run())
 
 
 if __name__ == "__main__":

@@ -14,8 +14,9 @@ arriving at t=0):
   sustained load.
 
 Compilation is excluded from both timings via a warmup pass that visits
-every decode shape (the continuous engine's per-stage compile cache is kept
-and only its admission stage/stats are reset for the timed run).
+every decode shape; the continuous engine's per-stage compile cache is kept
+and the public ``admission.reset()`` / ``reset_stats()`` seams restart the
+ramp and counters for the timed run.
 
 Usage: ``PYTHONPATH=src python -m benchmarks.serve_throughput`` (or through
 ``python -m benchmarks.run --only serve``).
@@ -23,10 +24,12 @@ Usage: ``PYTHONPATH=src python -m benchmarks.serve_throughput`` (or through
 from __future__ import annotations
 
 import time
+from typing import List
 
 import jax
 import numpy as np
 
+from benchmarks._schema import Record, print_csv
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import ContinuousBatchingEngine, ServeEngine
@@ -89,10 +92,9 @@ def _bench_continuous(model, params, prompts) -> tuple[float, list]:
     for p in prompts:
         engine.submit(p, max_new_tokens=NEW_TOKENS)
     engine.run()
-    # reset the ramp + stats; keep the compiled decode variants
-    engine.admission.stage = 0
-    engine.admission._pressure = 0
-    engine.stats.update(ticks=0, decoded_tokens=0, peak_width=0, stage_history=[])
+    # restart the ramp + zero the counters; compiled decode variants stay warm
+    engine.admission.reset()
+    engine.reset_stats()
 
     t0 = time.perf_counter()
     ids = [engine.submit(p, max_new_tokens=NEW_TOKENS) for p in prompts]
@@ -102,11 +104,11 @@ def _bench_continuous(model, params, prompts) -> tuple[float, list]:
     return elapsed, lat
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     cfg = get_config(ARCH, "smoke")
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
-    rows = []
+    records: List[Record] = []
     details = {"percentile_method": PERCENTILE_METHOD, "results": []}
     for load in LOADS:
         prompts = _prompts(cfg, load)
@@ -124,15 +126,30 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
                     "latency_p99_s": p99,
                 }
             )
-            rows.append(
-                (
-                    f"serve_{name}_load{load}",
-                    round(elapsed / total_tokens * 1e6, 1),
-                    f"{tps:.1f} tok/s p50={p50 * 1e3:.0f}ms p99={p99 * 1e3:.0f}ms",
-                )
-            )
+            ctx = {
+                "arch": ARCH, "load": load, "new_tokens": NEW_TOKENS,
+                "slots": SLOTS, "percentile_method": PERCENTILE_METHOD,
+            }
+            derived = f"{tps:.1f} tok/s p50={p50 * 1e3:.0f}ms p99={p99 * 1e3:.0f}ms"
+            records.append(Record(
+                f"serve_{name}_load{load}_tok_per_s", tps, "tok/s",
+                direction="higher", derived=derived, context=ctx,
+            ))
+            records.append(Record(
+                f"serve_{name}_load{load}_us_per_token",
+                round(elapsed / total_tokens * 1e6, 1), "us/token",
+                direction="lower", derived=derived, context=ctx,
+            ))
+            records.append(Record(
+                f"serve_{name}_load{load}_latency_p50", p50, "s",
+                direction="lower", context=ctx,
+            ))
+            records.append(Record(
+                f"serve_{name}_load{load}_latency_p99", p99, "s",
+                direction="lower", context=ctx,
+            ))
     _dump(details, out_dir, "serve_throughput.json")
-    return rows
+    return records
 
 
 def _dump(obj, out_dir: str, name: str) -> None:
@@ -145,9 +162,7 @@ def _dump(obj, out_dir: str, name: str) -> None:
 
 
 def main() -> None:
-    print("name,us_per_token,derived")
-    for row in run():
-        print(",".join(str(x) for x in row))
+    print_csv(run())
 
 
 if __name__ == "__main__":

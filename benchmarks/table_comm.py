@@ -26,9 +26,12 @@ from __future__ import annotations
 
 import json
 import os
+from typing import List
 
 import jax
 import jax.numpy as jnp
+
+from benchmarks._schema import Record, print_csv
 
 from repro.configs import get_config
 from repro.core.schedules import SEBS, ClassicalStagewise, WarmupConstant
@@ -75,41 +78,53 @@ def _payload_bytes() -> tuple[int, int]:
     return tree_size(params) * 4, float_state_bytes(state)
 
 
-def account(schedule, mode: str, grad_bytes: int, state_bytes: int) -> CommAccountant:
-    """Walk every update; ledger what each sync mode would move.
+def account(
+    schedule, mode: str, grad_bytes: int, state_bytes: int, epochs: int = 1
+) -> CommAccountant:
+    """Walk every update of ``epochs`` passes over the schedule's sample
+    budget; ledger what each sync mode would move.
+
+    Each epoch replays the schedule from stage 0 with fresh update/sync
+    counters — epochs are identical passes by construction, so per-epoch ×
+    epochs == totals holds EXACTLY (the pre-fix code walked one pass and
+    divided its totals by a fictional epoch count, understating per-epoch
+    updates/syncs/bytes by that factor; regression-tested in
+    ``tests/test_bench_trajectory.py``).
 
     Per-update costs come from the same :func:`repro.distributed.sync_cost`
     the live trainer records, so this table cannot drift from the runtime
     ledger. (Stage-boundary reshard traffic is excluded on purpose: it is
     O(stages), not O(updates), and identical across the schedules compared
     here at matched stage counts.)"""
-    controller = StageController(schedule, microbatch=MICRO)
     # accounting only — never materializes a mesh, so placeholder devices
     # stand in for the 8-device budget regardless of the host's real count
     planner = ElasticMeshPlanner(device_budget=DEVICE_BUDGET, devices=list(range(DEVICE_BUDGET)))
     scheduler = SyncScheduler(mode=mode, local_interval=LOCAL_INTERVAL)
     acct = CommAccountant()
-    update = last_sync = 0
-    for plan in controller.plans():
-        mp = planner.plan_for(plan)
-        update += 1
-        synced = mode == "exact" or mp.width == 1 or scheduler.due(update, last_sync, plan.stage)
-        if synced:
-            collectives, bytes_moved = sync_cost(
-                "exact" if mp.width == 1 else mode, mp.width,
-                grad_bytes=grad_bytes, state_bytes=state_bytes,
-            )
-            acct.record_update(plan.stage, collectives=collectives, bytes_moved=bytes_moved)
-            last_sync = update
-        else:
-            acct.record_update(plan.stage)
+    for _ in range(epochs):
+        controller = StageController(schedule, microbatch=MICRO)
+        update = last_sync = 0
+        for plan in controller.plans():
+            mp = planner.plan_for(plan)
+            update += 1
+            synced = mode == "exact" or mp.width == 1 or scheduler.due(update, last_sync, plan.stage)
+            if synced:
+                collectives, bytes_moved = sync_cost(
+                    "exact" if mp.width == 1 else mode, mp.width,
+                    grad_bytes=grad_bytes, state_bytes=state_bytes,
+                )
+                acct.record_update(plan.stage, collectives=collectives, bytes_moved=bytes_moved)
+                last_sync = update
+            else:
+                acct.record_update(plan.stage)
     return acct
 
 
-def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
+def run(out_dir: str = "benchmarks/results") -> List[Record]:
     grad_bytes, state_bytes = _payload_bytes()
     schedules = _schedules()
-    rows, details = [], {
+    records: List[Record] = []
+    details = {
         "arch": ARCH, "microbatch": MICRO, "b1": B1, "rho": RHO,
         "stages": STAGES, "device_budget": DEVICE_BUDGET, "epochs": EPOCHS,
         "local_interval": LOCAL_INTERVAL,
@@ -120,41 +135,53 @@ def run(out_dir: str = "benchmarks/results") -> list[tuple[str, float, str]]:
     }
     for name, schedule in schedules.items():
         for mode in ("exact", "local"):
-            acct = account(schedule, mode, grad_bytes, state_bytes)
+            # EPOCHS real passes over the matched sample budget — the walk
+            # covers every epoch it reports on (per-epoch × epochs == totals
+            # exactly; the old code walked once and divided by 5)
+            acct = account(schedule, mode, grad_bytes, state_bytes, epochs=EPOCHS)
             entry = {
                 "updates": acct.total("updates"),
                 "sync_events": acct.total("sync_events"),
                 "bytes_per_device": acct.total("bytes"),
                 "per_epoch": {
-                    "updates": acct.total("updates") / EPOCHS,
-                    "sync_events": acct.total("sync_events") / EPOCHS,
-                    "bytes_per_device": acct.total("bytes") / EPOCHS,
+                    "updates": acct.total("updates") // EPOCHS,
+                    "sync_events": acct.total("sync_events") // EPOCHS,
+                    "bytes_per_device": acct.total("bytes") // EPOCHS,
                 },
                 "per_stage": acct.summary(),
             }
+            assert entry["per_epoch"]["updates"] * EPOCHS == entry["updates"]
+            assert entry["per_epoch"]["sync_events"] * EPOCHS == entry["sync_events"]
+            assert entry["per_epoch"]["bytes_per_device"] * EPOCHS == entry["bytes_per_device"]
             details["results"][f"{name}_{mode}"] = entry
-            rows.append((
-                f"table_comm_{name}_{mode}", 0.0,
+            derived = (
                 f"updates={entry['updates']} syncs={entry['sync_events']} "
-                f"MiB/dev/epoch={entry['per_epoch']['bytes_per_device'] / 2**20:.1f}",
-            ))
+                f"MiB/dev/epoch={entry['per_epoch']['bytes_per_device'] / 2**20:.1f}"
+            )
+            ctx = {"epochs": EPOCHS, "per_epoch": entry["per_epoch"]}
+            for field, unit in (("updates", "count"), ("sync_events", "count"),
+                                ("bytes_per_device", "bytes")):
+                records.append(Record(
+                    f"table_comm_{name}_{mode}_{field}", entry[field], unit,
+                    direction="exact", derived=derived, context=ctx,
+                ))
     sebs, cls = details["results"]["sebs_exact"], details["results"]["classical_exact"]
     # the acceptance invariant: fewer updates -> strictly fewer syncs
     assert sebs["sync_events"] < cls["sync_events"], (sebs, cls)
     assert sebs["updates"] < cls["updates"], (sebs, cls)
     details["sebs_sync_saving_vs_classical"] = 1.0 - sebs["sync_events"] / cls["sync_events"]
-    rows.append((
-        "table_comm_saving", 0.0,
-        f"sebs syncs {sebs['sync_events']} vs classical {cls['sync_events']} "
-        f"({details['sebs_sync_saving_vs_classical']:.0%} fewer at matched samples)",
+    records.append(Record(
+        "table_comm_sebs_sync_saving_vs_classical",
+        details["sebs_sync_saving_vs_classical"], "ratio", direction="higher",
+        derived=(f"sebs syncs {sebs['sync_events']} vs classical {cls['sync_events']} "
+                 f"({details['sebs_sync_saving_vs_classical']:.0%} fewer at matched samples)"),
+        context={"sebs_syncs": sebs["sync_events"], "classical_syncs": cls["sync_events"]},
     ))
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "table_comm.json"), "w") as f:
         json.dump(details, f, indent=2)
-    return rows
+    return records
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    for r in run():
-        print(",".join(str(x) for x in r))
+    print_csv(run())

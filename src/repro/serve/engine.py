@@ -127,13 +127,25 @@ class ContinuousBatchingEngine:
         self._decodes: Dict[int, Any] = {}  # ring width -> jitted decode tick
         self.decode_compiles = 0  # compile-count hook (cf. SEBSTrainer._steps)
         self._rng = jax.random.key(seed)
-        self.stats: Dict[str, Any] = {
+        self.stats: Dict[str, Any] = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, Any]:
+        return {
             "ticks": 0,
             "decoded_tokens": 0,
             "peak_width": 0,
             # bounded: a long-lived engine ticks indefinitely
             "stage_history": deque(maxlen=4096),
         }
+
+    def reset_stats(self) -> None:
+        """Zero every counter for a fresh measurement window, in place (the
+        dict identity is stable — callers may hold a reference). Compiled
+        decode variants and the admission ramp are untouched; pair with
+        ``engine.admission.reset()`` to restart the ramp too."""
+        self.stats.clear()
+        self.stats.update(self._fresh_stats())
 
     # -- request intake ------------------------------------------------------
     def submit(
@@ -352,17 +364,29 @@ class PagedContinuousBatchingEngine:
         self._encode = jax.jit(model._encode) if model.cfg.is_encoder_decoder else None
         self._rng = jax.random.key(seed)
         self._chunk_rr = 0  # round-robin cursor over prefilling slots
-        self.stats: Dict[str, Any] = {
-            "ticks": 0,
-            "decoded_tokens": 0,
-            "peak_width": 0,
-            "stage_history": deque(maxlen=4096),
-            "prefill_chunks": 0,
-            "prefill_tokens_computed": 0,
-            "prefix_tokens_reused": 0,
-            "prompt_tokens_total": 0,
-            "cow_copies": 0,
-        }
+        self.stats: Dict[str, Any] = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, Any]:
+        stats = ContinuousBatchingEngine._fresh_stats()
+        stats.update(
+            prefill_chunks=0,
+            prefill_tokens_computed=0,
+            prefix_tokens_reused=0,
+            prompt_tokens_total=0,
+            cow_copies=0,
+        )
+        return stats
+
+    def reset_stats(self) -> None:
+        """Zero every counter (the dense engine's plus the paged extras)
+        and rebase the page pool's monotonic high-water mark, so the next
+        ``memory_stats()`` reports the peak of the new measurement window —
+        not a cold-start warmup's. Published prefix pages and compiled
+        steps are kept (steady-state semantics)."""
+        self.stats.clear()
+        self.stats.update(self._fresh_stats())
+        self.pool.peak_used = self.pool.used
 
     @staticmethod
     def _sharing_supported(model: LanguageModel) -> bool:

@@ -194,6 +194,14 @@ class AdmissionController:
     def num_stages(self) -> int:
         return len(self.ladder)
 
+    def reset(self) -> None:
+        """Return the ramp to stage 0 with no accumulated pressure — the
+        public warm-run seam: benchmarks re-time an engine whose compiled
+        decode variants are warm but whose admission history must not leak
+        into the measured run."""
+        self.stage = 0
+        self._pressure = 0
+
     def budget(self) -> int:
         return self.ladder[self.stage]
 
