@@ -25,6 +25,7 @@ import argparse
 import sys
 import time
 import traceback
+from pathlib import Path
 from typing import List, Optional
 
 from benchmarks import _schema
@@ -59,11 +60,25 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="let roofline_report degrade to an explicit skip "
                          "instead of failing when its input artifacts are absent")
     args = ap.parse_args(argv)
-    names = args.only.split(",") if args.only else list(MODULES)
+    if args.only is not None:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        if not names:
+            raise SystemExit(f"--only {args.only!r} names no modules; "
+                             f"known: {sorted(MODULES)}")
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            raise SystemExit(f"--only lists module(s) twice: {dupes} "
+                             "(each module writes one BENCH_<module>.json)")
+    else:
+        names = list(MODULES)
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         raise SystemExit(f"unknown benchmark module(s): {unknown}; "
                          f"known: {sorted(MODULES)}")
+    out_root = Path(args.out_root)
+    if out_root.exists() and not out_root.is_dir():
+        raise SystemExit(f"--out-root {out_root} exists and is not a directory")
+    out_root.mkdir(parents=True, exist_ok=True)
     roofline_report.ALLOW_MISSING = roofline_report.ALLOW_MISSING or args.allow_missing
     env = _env.fingerprint()
     print(_schema.CSV_HEADER)
@@ -74,7 +89,7 @@ def main(argv: Optional[List[str]] = None) -> None:
             records = _schema.as_records(MODULES[name].run())
             for rec in records:
                 print(rec.csv_row(), flush=True)
-            path = _schema.write_bench(name, records, args.out_root, env)
+            path = _schema.write_bench(name, records, out_root, env)
             print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failures.append(name)

@@ -1,0 +1,60 @@
+"""repro-lint: static analysis + runtime sanitizers for the repo's contracts.
+
+Why this package exists
+-----------------------
+Every result this repo reports rides on an equivalence guarantee that
+ordinary tests are too slow to police per-commit: bit-identical resume,
+bit-identical elastic width changes (canonical tree reduction, never
+backend-ordered ``psum``), token-identical paged serving, and a bounded
+one-executable-per-stage compile budget. ``repro-lint`` turns each of those
+into something a bare CI container checks in seconds:
+
+- **static rules** (``rules_determinism`` R1xx, ``rules_trace`` R2xx,
+  ``rules_compile`` R3xx, ``rules_pallas`` R4xx) run over the ``ast`` only —
+  the analyzed code is never imported — via ``tools/lint.py``;
+- **runtime sanitizers** (``sanitize``) are opt-in ``REPRO_SANITIZE=1``
+  hooks inside the trainer and the serving engines: NaN/Inf update
+  tripwire, exact PagePool refcount reconstruction, compile-counter audit.
+
+The compile-bucket registry (``contracts.py``)
+----------------------------------------------
+``contracts.COMPILE_BUCKETS`` is the declared set of ``jax.jit`` boundaries
+in the enforced paths (``serve/``, ``train/``, ``distributed/``), each with
+the builder function that owns it and a human-readable executable
+cardinality (e.g. *one decode executable per admission-ladder width*).
+It is deliberately a hand-maintained literal: adding a jit boundary MUST
+show up in a diff of this registry, so the compile-cost budget is reviewed
+like any other resource budget. Rule R301 fails on undeclared boundaries,
+R302 fails on stale registry entries, and the runtime compile-counter
+audits live engines against the same entries — one source of truth,
+enforced from both sides.
+
+Suppressions
+------------
+``# repro-lint: disable=R101 -- justification`` on the flagged line (or
+``disable-file=`` anywhere in the file). ``tools/lint.py --strict`` — the CI
+mode — additionally rejects suppressions that carry no justification text.
+"""
+from repro.analysis import contracts
+from repro.analysis.core import (
+    LintResult,
+    Module,
+    Rule,
+    Suppression,
+    Violation,
+    all_rules,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = [
+    "contracts",
+    "LintResult",
+    "Module",
+    "Rule",
+    "Suppression",
+    "Violation",
+    "all_rules",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,411 @@
+"""repro-lint framework: rules, suppressions, module loading, reporting.
+
+The linter is a plain-``ast`` pass — no imports of the analyzed code, no jax
+dependency — so it runs in a bare CI container and cannot be confused by
+import-time side effects. Each rule has a stable ID (``R1xx`` determinism,
+``R2xx`` trace hazards, ``R3xx`` compile stability, ``R4xx`` Pallas kernel
+contracts), a one-line title, and a fix-it hint printed with every finding.
+
+Suppression contract
+--------------------
+A violation is silenced by a comment **on the flagged line**::
+
+    grads = jax.lax.pmean(grads, axes)  # repro-lint: disable=R101 -- fixed width
+
+``disable=R101,R202`` silences several rules; ``disable=all`` silences every
+rule on that line. ``# repro-lint: disable-file=R401`` anywhere in the file
+silences a rule file-wide. Under ``tools/lint.py --strict`` every suppression
+must carry a ``-- justification`` tail; a bare suppression is itself reported.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)=([A-Za-z0-9_,]+|all)"
+    r"(?:\s*--\s*(\S.*))?"
+)
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One finding: where, which rule, what, and how to fix it."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    hint: str
+
+    def format(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}\n"
+            f"    hint: {self.hint}"
+        )
+
+
+@dataclass(frozen=True)
+class Suppression:
+    """A ``# repro-lint: disable=...`` comment that actually silenced a rule."""
+
+    rule: str
+    path: str
+    line: int
+    justification: Optional[str]  # the ``-- reason`` tail, None when absent
+
+
+@dataclass
+class Module:
+    """One parsed source file plus everything rules need to inspect it."""
+
+    path: str  # display path (as given on the command line)
+    rel: str  # normalized posix-ish path used for rule scoping
+    source: str
+    tree: ast.Module
+    aliases: Dict[str, str] = field(default_factory=dict)
+    # line -> set of rule ids disabled on that line ("all" disables every rule)
+    line_disables: Dict[int, Set[str]] = field(default_factory=dict)
+    file_disables: Set[str] = field(default_factory=set)
+    # (line, rule) -> justification text (None = bare suppression)
+    justifications: Dict[Tuple[int, str], Optional[str]] = field(default_factory=dict)
+
+    def is_suppressed(self, rule_id: str, line: int) -> bool:
+        if rule_id in self.file_disables or "all" in self.file_disables:
+            return True
+        on_line = self.line_disables.get(line, set())
+        return rule_id in on_line or "all" in on_line
+
+    def suppression_for(self, rule_id: str, line: int) -> Suppression:
+        just = self.justifications.get((line, rule_id))
+        if just is None:
+            just = self.justifications.get((line, "all"))
+        if just is None:
+            for (ln, rid), j in self.justifications.items():
+                if ln == 0 and rid in (rule_id, "all"):  # file-level
+                    just = j
+                    break
+        return Suppression(rule=rule_id, path=self.path, line=line, justification=just)
+
+
+class Rule:
+    """Base class: subclasses set id/title/hint and implement ``check``."""
+
+    id: str = "R000"
+    title: str = ""
+    hint: str = ""
+    # rel-path substrings this rule is scoped to; empty tuple = every file
+    applies: Tuple[str, ...] = ()
+
+    def applies_to(self, mod: Module) -> bool:
+        return not self.applies or any(s in mod.rel for s in self.applies)
+
+    def check(self, mod: Module) -> Iterator[Violation]:  # pragma: no cover
+        raise NotImplementedError
+
+    def violation(self, mod: Module, node: ast.AST, message: str) -> Violation:
+        return Violation(
+            rule=self.id,
+            path=mod.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+            hint=self.hint,
+        )
+
+
+# ---------------------------------------------------------------------------
+# module loading
+# ---------------------------------------------------------------------------
+
+
+def _parse_suppressions(mod: Module) -> None:
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(mod.source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            kind, ids, justification = m.group(1), m.group(2), m.group(3)
+            rule_ids = {r.strip() for r in ids.split(",") if r.strip()}
+            if kind == "disable-file":
+                mod.file_disables.update(rule_ids)
+                for rid in rule_ids:
+                    mod.justifications[(0, rid)] = justification
+            else:
+                line = tok.start[0]
+                mod.line_disables.setdefault(line, set()).update(rule_ids)
+                for rid in rule_ids:
+                    mod.justifications[(line, rid)] = justification
+    except tokenize.TokenError:  # pragma: no cover - malformed tail
+        pass
+
+
+def _build_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> fully qualified module/object path, from imports."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                aliases[local] = a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def load_source(source: str, path: str = "<string>", rel: Optional[str] = None) -> Module:
+    tree = ast.parse(source, filename=path)
+    mod = Module(path=path, rel=(rel or path).replace("\\", "/"), source=source, tree=tree)
+    mod.aliases = _build_aliases(tree)
+    _parse_suppressions(mod)
+    return mod
+
+
+def load_file(path: Path, rel: Optional[str] = None) -> Module:
+    source = path.read_text(encoding="utf-8")
+    return load_source(source, path=str(path), rel=rel or path.as_posix())
+
+
+def iter_py_files(paths: Sequence[Path]) -> Iterator[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the rule modules
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve an attribute chain to a dotted path through the import aliases.
+
+    ``jnp.asarray`` -> ``jax.numpy.asarray``; ``lax.psum`` (via
+    ``from jax import lax``) -> ``jax.lax.psum``; plain names resolve through
+    ``from x import y`` aliases. Returns None for non-name expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(aliases.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+def function_table(tree: ast.Module) -> List[Tuple[str, ast.AST]]:
+    """All (qualname, FunctionDef) pairs, qualified through classes/functions."""
+    out: List[Tuple[str, ast.AST]] = []
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                out.append((qual, child))
+                walk(child, f"{qual}.")
+            elif isinstance(child, ast.ClassDef):
+                walk(child, f"{prefix}{child.name}.")
+            else:
+                walk(child, prefix)
+
+    walk(tree, "")
+    return out
+
+
+def enclosing_function(
+    table: List[Tuple[str, ast.AST]], node: ast.AST
+) -> Optional[Tuple[str, ast.AST]]:
+    """Innermost table entry whose span contains ``node`` (by line range)."""
+    line = getattr(node, "lineno", None)
+    if line is None:
+        return None
+    best: Optional[Tuple[str, ast.AST]] = None
+    for qual, fn in table:
+        if fn.lineno <= line <= (fn.end_lineno or fn.lineno):
+            if best is None or fn.lineno >= best[1].lineno:
+                best = (qual, fn)
+    return best
+
+
+def _is_jax_jit(node: ast.AST, aliases: Dict[str, str]) -> bool:
+    return dotted_name(node, aliases) in ("jax.jit", "jax.api.jit")
+
+
+def jit_call_sites(mod: Module) -> List[ast.Call]:
+    """Every ``jax.jit(...)`` Call node (including inside partial decorators)."""
+    sites = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func, mod.aliases):
+            sites.append(node)
+    return sites
+
+
+@dataclass
+class JitFunction:
+    """A function whose body runs under jax.jit (traced)."""
+
+    qualname: str
+    node: ast.AST
+    traced_params: Set[str]
+
+
+def _static_names(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    """static_argnames / static_argnums declared on a jit (or partial) call."""
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        val = kw.value
+        elts = val.elts if isinstance(val, (ast.Tuple, ast.List)) else [val]
+        if kw.arg == "static_argnames":
+            names.update(
+                e.value for e in elts if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            )
+        elif kw.arg == "static_argnums":
+            nums.update(
+                e.value for e in elts if isinstance(e, ast.Constant) and isinstance(e.value, int)
+            )
+    return names, nums
+
+
+def _traced_params(fn: ast.AST, static_names: Set[str], static_nums: Set[int]) -> Set[str]:
+    args = fn.args
+    ordered = [a.arg for a in args.posonlyargs + args.args]
+    traced = {
+        name
+        for i, name in enumerate(ordered)
+        if i not in static_nums and name not in static_names and name != "self"
+    }
+    traced.update(a.arg for a in args.kwonlyargs if a.arg not in static_names)
+    return traced
+
+
+def jitted_functions(mod: Module) -> List[JitFunction]:
+    """Functions traced by jax.jit, found two ways:
+
+    1. decorated: ``@jax.jit`` or ``@functools.partial(jax.jit, ...)``;
+    2. wrapped by name: ``jax.jit(step, ...)`` where ``step`` is a local
+       FunctionDef in the same module (the repo's builder idiom).
+    """
+    table = function_table(mod.tree)
+    by_name: Dict[str, List[Tuple[str, ast.AST]]] = {}
+    for qual, fn in table:
+        by_name.setdefault(fn.name, []).append((qual, fn))
+
+    out: List[JitFunction] = []
+    seen: Set[int] = set()
+
+    def add(qual: str, fn: ast.AST, names: Set[str], nums: Set[int]) -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        out.append(JitFunction(qual, fn, _traced_params(fn, names, nums)))
+
+    for qual, fn in table:
+        for dec in getattr(fn, "decorator_list", []):
+            if _is_jax_jit(dec, mod.aliases):
+                add(qual, fn, set(), set())
+            elif (
+                isinstance(dec, ast.Call)
+                and dotted_name(dec.func, mod.aliases) in ("functools.partial", "partial")
+                and dec.args
+                and _is_jax_jit(dec.args[0], mod.aliases)
+            ):
+                names, nums = _static_names(dec)
+                add(qual, fn, names, nums)
+
+    for call in jit_call_sites(mod):
+        if call.args and isinstance(call.args[0], ast.Name):
+            names, nums = _static_names(call)
+            for qual, fn in by_name.get(call.args[0].id, []):
+                add(qual, fn, names, nums)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LintResult:
+    violations: List[Violation] = field(default_factory=list)
+    suppressions: List[Suppression] = field(default_factory=list)
+    errors: List[str] = field(default_factory=list)  # unparsable files
+    files_checked: int = 0
+
+
+def all_rules() -> List[Rule]:
+    """The full registered rule set (imported lazily to avoid cycles)."""
+    from repro.analysis import rules_compile, rules_determinism, rules_pallas, rules_trace
+
+    return [
+        *rules_determinism.RULES,
+        *rules_trace.RULES,
+        *rules_compile.RULES,
+        *rules_pallas.RULES,
+    ]
+
+
+def lint_module(mod: Module, rules: Optional[Sequence[Rule]] = None) -> LintResult:
+    result = LintResult(files_checked=1)
+    for rule in rules if rules is not None else all_rules():
+        if not rule.applies_to(mod):
+            continue
+        for v in rule.check(mod):
+            if mod.is_suppressed(v.rule, v.line):
+                result.suppressions.append(mod.suppression_for(v.rule, v.line))
+            else:
+                result.violations.append(v)
+    result.violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return result
+
+
+def lint_source(
+    source: str,
+    rel: str = "repro/fixture.py",
+    rules: Optional[Sequence[Rule]] = None,
+) -> LintResult:
+    """Lint a source string as if it lived at ``rel`` (test fixture entry)."""
+    return lint_module(load_source(source, path=rel, rel=rel), rules)
+
+
+def lint_paths(
+    paths: Sequence[Path],
+    rules: Optional[Sequence[Rule]] = None,
+    *,
+    registry_check: bool = True,
+) -> LintResult:
+    """Lint every .py file under ``paths``; optionally cross-check the
+    compile-bucket registry (R302) against the scanned tree."""
+    rules = list(rules) if rules is not None else all_rules()
+    result = LintResult()
+    modules: List[Module] = []
+    for path in iter_py_files(paths):
+        try:
+            mod = load_file(path)
+        except SyntaxError as e:
+            result.errors.append(f"{path}: {e}")
+            continue
+        modules.append(mod)
+        part = lint_module(mod, rules)
+        result.violations.extend(part.violations)
+        result.suppressions.extend(part.suppressions)
+        result.files_checked += 1
+    if registry_check:
+        from repro.analysis.rules_compile import check_registry
+
+        result.violations.extend(check_registry(modules))
+    result.violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return result

@@ -1,0 +1,124 @@
+"""R3xx — compile-stability rules.
+
+The repo budgets executables per subsystem (one decode executable per
+admission-ladder width, one train-step executable per stage, ...). That
+budget is only auditable if every ``jax.jit`` boundary in the enforced
+paths lives inside a *declared* builder: the registry in
+``analysis.contracts`` names each builder and its executable cardinality.
+R301 pins jit call sites to registered builders; ``check_registry``
+(reported as R302) walks the whole scanned tree the other way and fails
+when a declared bucket no longer exists — a stale registry is as useless
+as no registry.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Iterator, List, Set
+
+from repro.analysis import contracts
+from repro.analysis.core import (
+    Module,
+    Rule,
+    Violation,
+    enclosing_function,
+    function_table,
+    jit_call_sites,
+)
+
+
+class UndeclaredJitBoundary(Rule):
+    """R301: jax.jit call outside a registered compile-bucket builder."""
+
+    id = "R301"
+    title = "jax.jit boundary not declared in the compile-bucket registry"
+    hint = (
+        "route the computation through an existing builder in this module, "
+        "or register the new boundary in repro/analysis/contracts.py "
+        "(COMPILE_BUCKETS) with its executable cardinality so the compile "
+        "budget change is visible in review."
+    )
+    applies = contracts.ENFORCED_JIT_PATHS
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        declared = contracts.buckets_for(mod.rel)
+        table = function_table(mod.tree)
+        for call in jit_call_sites(mod):
+            enclosing = enclosing_function(table, call)
+            if enclosing is None:
+                yield self.violation(
+                    mod, call,
+                    "module-level jax.jit in an enforced path — executables "
+                    "created at import time bypass every bucket audit",
+                )
+                continue
+            qual, _fn = enclosing
+            # credit the outermost registered ancestor: jit calls inside
+            # closures of a registered builder belong to its bucket.
+            parts = qual.split(".")
+            owners = {".".join(parts[: i + 1]) for i in range(len(parts))}
+            if not owners & set(declared):
+                yield self.violation(
+                    mod, call,
+                    f"jax.jit inside `{qual}`, which is not a registered "
+                    "compile-bucket builder for this module",
+                )
+
+
+def check_registry(modules: Iterable[Module]) -> List[Violation]:
+    """R302: every declared bucket must resolve to a real builder function.
+
+    Runs over the full set of scanned modules (not per-file) so that a
+    rename in e.g. ``serve/step.py`` fails the lint until the registry is
+    updated alongside it. Only buckets whose declaring module was part of
+    the scan are checked — linting a single unrelated file must not demand
+    the whole tree.
+    """
+    hint = (
+        "update repro/analysis/contracts.py: point the bucket at the renamed "
+        "builder, or delete the bucket if the boundary is gone (the runtime "
+        "compile-counter keys off the same entries)."
+    )
+    mods = list(modules)
+    out: List[Violation] = []
+    by_module: Dict[str, List[contracts.CompileBucket]] = {}
+    for bucket in contracts.COMPILE_BUCKETS:
+        by_module.setdefault(bucket.module, []).append(bucket)
+    for module_rel, buckets in sorted(by_module.items()):
+        scanned = [m for m in mods if m.rel.endswith(module_rel)]
+        if not scanned:
+            continue
+        mod = scanned[0]
+        names: Set[str] = {qual for qual, _ in function_table(mod.tree)}
+        for bucket in buckets:
+            if bucket.function not in names:
+                out.append(
+                    Violation(
+                        rule="R302",
+                        path=mod.path,
+                        line=1,
+                        col=0,
+                        message=(
+                            f"compile bucket `{bucket.key}` declares builder "
+                            f"`{bucket.function}`, which does not exist in "
+                            "this module"
+                        ),
+                        hint=hint,
+                    )
+                )
+        if not jit_call_sites(mod):
+            out.append(
+                Violation(
+                    rule="R302",
+                    path=mod.path,
+                    line=1,
+                    col=0,
+                    message=(
+                        "module is declared in the compile-bucket registry "
+                        "but contains no jax.jit boundary"
+                    ),
+                    hint=hint,
+                )
+            )
+    return out
+
+
+RULES = [UndeclaredJitBoundary()]

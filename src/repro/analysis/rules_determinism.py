@@ -1,0 +1,203 @@
+"""R1xx — determinism rules.
+
+The repo's equivalence guarantees (bit-identical resume, bit-identical
+elastic width changes, token-identical paged serving) all reduce to one
+discipline: no operation whose result depends on backend reduction order,
+hash-salted iteration order, or ambient host state. These rules catch the
+three ways that discipline has historically been broken.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.core import Module, Rule, Violation, dotted_name
+
+#: collectives whose reduction order is the backend's choice, not ours
+_ORDERED_COLLECTIVES = {
+    "jax.lax.psum": "psum",
+    "jax.lax.pmean": "pmean",
+    "jax.lax.psum_scatter": "psum_scatter",
+    "jax.lax.all_to_all": "all_to_all",
+}
+
+_STATE_PATHS = (
+    "repro/core/",
+    "repro/train/",
+    "repro/checkpoint/",
+    "repro/data/",
+    "repro/distributed/",
+    "repro/optim/",
+)
+
+_WALLCLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow", "datetime.date.today",
+    "os.urandom", "uuid.uuid1", "uuid.uuid4", "secrets.token_bytes",
+    "secrets.token_hex",
+}
+
+#: numpy.random entry points that are fine: explicitly seeded constructors
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+
+
+class BackendOrderedCollective(Rule):
+    """R101: raw backend-ordered collective in a bit-identity path."""
+
+    id = "R101"
+    title = "backend-ordered collective in train/distributed path"
+    hint = (
+        "float reduction order must be a function of the accumulation count, "
+        "not the topology: use span_tree_sum over a jax.lax.all_gather "
+        "(repro.distributed.step) inside shard_map_manual. Suppress with a "
+        "justification only where cross-width bit-identity is explicitly out "
+        "of contract."
+    )
+    applies = ("repro/train/", "repro/distributed/")
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func, mod.aliases)
+            if name in _ORDERED_COLLECTIVES:
+                yield self.violation(
+                    mod, node,
+                    f"raw jax.lax.{_ORDERED_COLLECTIVES[name]} — the backend "
+                    "picks the reduction order, so results change with "
+                    "topology/width",
+                )
+
+
+def _is_set_expr(node: ast.AST, mod: Module) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func, mod.aliases) in ("set", "frozenset")
+    return False
+
+
+class SetIteration(Rule):
+    """R102: iterating a set — order is hash-salted per process."""
+
+    id = "R102"
+    title = "iteration over a set"
+    hint = (
+        "set iteration order is salted by PYTHONHASHSEED and differs across "
+        "processes; iterate sorted(...) (or keep a list/dict, which preserve "
+        "insertion order) before the order can reach pytree construction, "
+        "RNG folds, or float accumulation."
+    )
+    applies = ("repro/",)
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                if _is_set_expr(node.iter, mod):
+                    yield self.violation(
+                        mod, node.iter, "for-loop iterates a set directly"
+                    )
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter, mod):
+                        yield self.violation(
+                            mod, gen.iter, "comprehension iterates a set directly"
+                        )
+
+
+class AmbientEntropy(Rule):
+    """R103: wall-clock / unseeded randomness where state is checkpointed."""
+
+    id = "R103"
+    title = "wall-clock or unseeded randomness in checkpointed-state path"
+    hint = (
+        "kill-equivalence requires every stochastic or time-dependent input "
+        "to live in checkpointed state: derive from the trainer's host_rng, "
+        "a sample-offset fold_in key, or np.random.default_rng(seed) — never "
+        "from wall-clock or the process-global RNG."
+    )
+    applies = _STATE_PATHS
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func, mod.aliases)
+            if name is None:
+                continue
+            if name in _WALLCLOCK_CALLS:
+                yield self.violation(
+                    mod, node, f"call to {name} in a checkpointed-state path"
+                )
+            elif name.startswith("random."):
+                yield self.violation(
+                    mod, node,
+                    f"process-global stdlib RNG ({name}) — state is neither "
+                    "seeded per-run nor checkpointed",
+                )
+            elif name.startswith("numpy.random."):
+                leaf = name.split(".")[-1]
+                if leaf not in _NP_RANDOM_OK:
+                    yield self.violation(
+                        mod, node,
+                        f"global numpy RNG ({name}) — use a checkpointed "
+                        "np.random.default_rng Generator",
+                    )
+
+
+def _dict_view_iter(node: ast.AST) -> bool:
+    """``x.keys() / x.values() / x.items()`` (and bare dict names are fine:
+    insertion order is deterministic — the hazard is only when the fold order
+    is derived from enumeration of an unsorted mapping, checked by the
+    caller)."""
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in ("keys", "values", "items")
+    )
+
+
+def _contains_fold(nodes, mod: Module) -> bool:
+    for root in nodes:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func, mod.aliases) or ""
+                if name.endswith("fold_in") or name.endswith("fold_in_name"):
+                    return True
+    return False
+
+
+class UnsortedFoldOrder(Rule):
+    """R104: RNG fold_in driven by mapping-enumeration order."""
+
+    id = "R104"
+    title = "RNG fold_in keyed by dict-enumeration order"
+    hint = (
+        "fold keys by NAME or sorted key, never by enumeration position: "
+        "iterate sorted(d) (or fold_in_name(key, k)) so inserting an entry "
+        "cannot reshuffle every later key (cf. repro.utils.prng)."
+    )
+    applies = ("repro/",)
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                if _dict_view_iter(node.iter) and _contains_fold(node.body, mod):
+                    yield self.violation(
+                        mod, node.iter,
+                        "loop over dict view feeds jax.random.fold_in — the "
+                        "fold order tracks insertion order",
+                    )
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)):
+                elts = [node.key, node.value] if isinstance(node, ast.DictComp) else [node.elt]
+                for gen in node.generators:
+                    if _dict_view_iter(gen.iter) and _contains_fold(elts, mod):
+                        yield self.violation(
+                            mod, gen.iter,
+                            "comprehension over dict view feeds "
+                            "jax.random.fold_in",
+                        )
+
+
+RULES = [BackendOrderedCollective(), SetIteration(), AmbientEntropy(), UnsortedFoldOrder()]

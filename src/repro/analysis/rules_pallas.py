@@ -1,0 +1,232 @@
+"""R4xx — Pallas kernel contract rules (scoped to ``kernels/*/kernel.py``).
+
+Pallas failures are late and opaque: a BlockSpec index map with the wrong
+arity raises deep inside lowering, a non-divisible grid silently reads
+out-of-bounds garbage on TPU (interpret mode pads with zeros and hides it),
+and a kernel without an ``interpret=`` path cannot be ref-diffed in the CPU
+CI container at all. These rules pin the conventions the three existing
+kernels (flash_attention, gla, fused_optim) established.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.core import (
+    Module,
+    Rule,
+    Violation,
+    dotted_name,
+    enclosing_function,
+    function_table,
+)
+
+_KERNEL_SCOPE = ("repro/kernels/",)
+
+
+def _pallas_calls(mod: Module) -> List[ast.Call]:
+    return [
+        node
+        for node in ast.walk(mod.tree)
+        if isinstance(node, ast.Call)
+        and dotted_name(node.func, mod.aliases)
+        in ("jax.experimental.pallas.pallas_call", "pallas.pallas_call", "pl.pallas_call")
+    ]
+
+
+def _blockspec_calls(root: ast.AST, mod: Module) -> List[ast.Call]:
+    return [
+        node
+        for node in ast.walk(root)
+        if isinstance(node, ast.Call)
+        and dotted_name(node.func, mod.aliases)
+        in ("jax.experimental.pallas.BlockSpec", "pallas.BlockSpec", "pl.BlockSpec")
+    ]
+
+
+def _resolve_in(fn: ast.AST, expr: ast.AST) -> ast.AST:
+    """One-level name resolution: ``grid`` -> the value last assigned to it
+    inside ``fn`` (the kernels' ``grid = (...)`` idiom)."""
+    if not isinstance(expr, ast.Name):
+        return expr
+    target = expr.id
+    value: ast.AST = expr
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == target:
+                    value = node.value
+    return value
+
+
+def _grid_rank(fn: ast.AST, call: ast.Call) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            value = _resolve_in(fn, kw.value)
+            if isinstance(value, (ast.Tuple, ast.List)):
+                return len(value.elts)
+            if isinstance(value, ast.Constant) and isinstance(value.value, int):
+                return 1
+            return None  # dynamic grid expression — arity unknowable here
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.keyword]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw
+    return None
+
+
+class IndexMapArity(Rule):
+    """R401: BlockSpec index-map arity must equal the grid rank."""
+
+    id = "R401"
+    title = "BlockSpec index map arity does not match the grid rank"
+    hint = (
+        "the index map receives exactly one argument per grid axis; give the "
+        "lambda len(grid) parameters (captured constants go in defaulted "
+        "trailing args, e.g. `lambda bh, qi, ki, g=group: ...`)."
+    )
+    applies = _KERNEL_SCOPE
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        table = function_table(mod.tree)
+        for call in _pallas_calls(mod):
+            enc = enclosing_function(table, call)
+            fn = enc[1] if enc else mod.tree
+            rank = _grid_rank(fn, call)
+            if rank is None:
+                continue
+            for spec in _blockspec_calls(fn, mod):
+                lam = next(
+                    (a for a in list(spec.args) + [kw.value for kw in spec.keywords]
+                     if isinstance(a, ast.Lambda)),
+                    None,
+                )
+                if lam is None:
+                    continue
+                n_defaults = len(lam.args.defaults)
+                n_params = len(lam.args.posonlyargs) + len(lam.args.args) - n_defaults
+                if n_params != rank:
+                    yield self.violation(
+                        mod, lam,
+                        f"index map takes {n_params} grid argument(s) but the "
+                        f"grid has rank {rank}",
+                    )
+
+
+class InterpretPath(Rule):
+    """R402: every kernel must keep a runnable ``interpret=True`` ref path."""
+
+    id = "R402"
+    title = "kernel without a threaded interpret path or sibling ref.py"
+    hint = (
+        "thread an `interpret: bool` parameter from the public entry point "
+        "into pl.pallas_call(..., interpret=interpret) and keep the pure-jnp "
+        "reference in the sibling ref.py — CPU CI validates kernels only "
+        "through that pair."
+    )
+    applies = _KERNEL_SCOPE
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for call in _pallas_calls(mod):
+            kw = _kwarg(call, "interpret")
+            if kw is None:
+                yield self.violation(
+                    mod, call,
+                    "pl.pallas_call without an interpret= kwarg — the kernel "
+                    "cannot run in interpreter mode for ref-diffing",
+                )
+            elif isinstance(kw.value, ast.Constant):
+                yield self.violation(
+                    mod, kw.value,
+                    f"interpret={kw.value.value!r} is hardwired — thread a "
+                    "caller-controlled flag instead",
+                )
+        if _pallas_calls(mod) and mod.rel.endswith("kernel.py"):
+            path = Path(mod.path)
+            if path.exists() and not (path.parent / "ref.py").exists():
+                yield Violation(
+                    rule=self.id,
+                    path=mod.path,
+                    line=1,
+                    col=0,
+                    message="kernel module has no sibling ref.py reference "
+                    "implementation",
+                    hint=self.hint,
+                )
+
+
+def _has_floordiv(node: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.BinOp) and isinstance(n.op, ast.FloorDiv)
+        for n in ast.walk(node)
+    )
+
+
+def _is_ceil_div(node: ast.AST) -> bool:
+    """The ``-(-a // b)`` ceil-division idiom."""
+    return (
+        isinstance(node, ast.UnaryOp)
+        and isinstance(node.op, ast.USub)
+        and isinstance(node.operand, ast.BinOp)
+        and isinstance(node.operand.op, ast.FloorDiv)
+        and isinstance(node.operand.left, ast.UnaryOp)
+        and isinstance(node.operand.left.op, ast.USub)
+    )
+
+
+def _guards_divisibility(fn: ast.AST, mod: Module) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assert) and any(
+            isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+            for n in ast.walk(node.test)
+        ):
+            return True
+        if isinstance(node, ast.If) and any(
+            isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+            for n in ast.walk(node.test)
+        ) and any(isinstance(s, ast.Raise) for s in ast.walk(node)):
+            return True
+        if _is_ceil_div(node):
+            return True  # inputs are padded up to a block multiple instead
+        if isinstance(node, ast.Call) and dotted_name(node.func, mod.aliases) in (
+            "pl.cdiv", "jax.experimental.pallas.cdiv", "pallas.cdiv", "math.ceil",
+        ):
+            return True
+    return False
+
+
+class GridDivisibility(Rule):
+    """R403: block-divided grids need a divisibility guard or ceil-padding."""
+
+    id = "R403"
+    title = "grid derived by // without a divisibility guard"
+    hint = (
+        "a truncating `dim // block` grid silently drops the remainder: "
+        "either assert `dim % block == 0` before the call (flash_attention/"
+        "gla style) or pad inputs up with the `-(-n // block)` ceil idiom "
+        "(fused_optim style)."
+    )
+    applies = _KERNEL_SCOPE
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        table = function_table(mod.tree)
+        for call in _pallas_calls(mod):
+            enc = enclosing_function(table, call)
+            fn = enc[1] if enc else mod.tree
+            kw = _kwarg(call, "grid")
+            if kw is None:
+                continue
+            grid_expr = _resolve_in(fn, kw.value)
+            if _has_floordiv(grid_expr) and not _guards_divisibility(fn, mod):
+                yield self.violation(
+                    mod, kw.value,
+                    "grid uses floor division but the enclosing function "
+                    "neither asserts divisibility nor ceil-pads the inputs",
+                )
+
+
+RULES = [IndexMapArity(), InterpretPath(), GridDivisibility()]

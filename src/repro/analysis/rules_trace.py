@@ -1,0 +1,231 @@
+"""R2xx — trace-hazard rules.
+
+Hazards that only bite once a function is staged out under ``jax.jit``:
+Python control flow on tracers raises ``TracerBoolConversionError`` (or
+silently specializes if the value is concrete during tracing), unhashable
+static arguments fail at dispatch, and host syncs (``.item()``/``float()``)
+inside a traced body force a device round-trip per call. These are found
+statically by pairing each jitted function (decorator form or the repo's
+``return jax.jit(step, ...)`` builder idiom) with its traced parameter set.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from repro.analysis.core import (
+    JitFunction,
+    Module,
+    Rule,
+    Violation,
+    dotted_name,
+    jit_call_sites,
+    jitted_functions,
+)
+
+_HOST_SYNC_METHODS = ("item", "tolist", "__array__")
+_HOST_CAST_BUILTINS = ("float", "int", "bool")
+
+
+def _traced_names_in(node: ast.AST, traced: Set[str]) -> Set[str]:
+    return {
+        n.id
+        for n in ast.walk(node)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) and n.id in traced
+    }
+
+
+def _is_identity_test(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` and ``isinstance`` checks compare
+    Python object identity/type, not traced values — always safe."""
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn)) for op in test.ops
+    ):
+        return True
+    if isinstance(test, ast.Call) and isinstance(test.func, ast.Name):
+        return test.func.id in ("isinstance", "callable", "hasattr", "len")
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_identity_test(test.operand)
+    if isinstance(test, ast.BoolOp):
+        return all(_is_identity_test(v) for v in test.values)
+    return False
+
+
+def _own_statements(fn: ast.AST) -> Iterator[ast.stmt]:
+    """Statements of ``fn`` excluding nested function/class bodies (a nested
+    def may be a host-side helper with its own trace story)."""
+    stack = list(fn.body)
+    while stack:
+        stmt = stack.pop()
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+            elif isinstance(child, (ast.ExceptHandler,)):
+                stack.extend(child.body)
+
+
+class TracedPythonBranch(Rule):
+    """R201: Python ``if``/``while`` on a traced value in a jitted function."""
+
+    id = "R201"
+    title = "Python control flow on a traced value"
+    hint = (
+        "a tracer has no concrete truth value: use jax.lax.cond / "
+        "jax.lax.while_loop / jnp.where for data-dependent control flow, or "
+        "declare the argument static (and register the compile bucket) if it "
+        "is genuinely shape-determining."
+    )
+    applies = ("repro/",)
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for jf in jitted_functions(mod):
+            for stmt in _own_statements(jf.node):
+                if not isinstance(stmt, (ast.If, ast.While)):
+                    continue
+                if _is_identity_test(stmt.test):
+                    continue
+                names = _traced_names_in(stmt.test, jf.traced_params)
+                if names:
+                    kind = "if" if isinstance(stmt, ast.If) else "while"
+                    yield self.violation(
+                        mod, stmt,
+                        f"Python `{kind}` on traced parameter(s) "
+                        f"{', '.join(sorted(names))} of jitted "
+                        f"`{jf.qualname}`",
+                    )
+
+
+class BadStaticArgs(Rule):
+    """R202: static_argnums/static_argnames hazards on a jit boundary."""
+
+    id = "R202"
+    title = "unauditable or unhashable static argument declaration"
+    hint = (
+        "declare static arguments as literal int/str constants (tuples of "
+        "them) so the compile-bucket cardinality is auditable, and never "
+        "give a static parameter a mutable (list/dict/set) default — static "
+        "args are dispatch-cache keys and must be hashable."
+    )
+    applies = ("repro/",)
+
+    def _const_elts(self, val: ast.AST) -> Optional[list]:
+        elts = val.elts if isinstance(val, (ast.Tuple, ast.List)) else [val]
+        out = []
+        for e in elts:
+            if not isinstance(e, ast.Constant):
+                return None
+            out.append(e.value)
+        return out
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for call in jit_call_sites(mod):
+            for kw in call.keywords:
+                if kw.arg not in ("static_argnums", "static_argnames"):
+                    continue
+                vals = self._const_elts(kw.value)
+                if vals is None:
+                    yield self.violation(
+                        mod, kw.value,
+                        f"{kw.arg} is computed at runtime — the set of "
+                        "compile keys cannot be audited statically",
+                    )
+                elif kw.arg == "static_argnums" and not all(
+                    isinstance(v, int) and not isinstance(v, bool) for v in vals
+                ):
+                    yield self.violation(
+                        mod, kw.value, "static_argnums entries must be int literals"
+                    )
+                elif kw.arg == "static_argnames" and not all(
+                    isinstance(v, str) for v in vals
+                ):
+                    yield self.violation(
+                        mod, kw.value, "static_argnames entries must be str literals"
+                    )
+        for jf in jitted_functions(mod):
+            args = jf.node.args
+            positional = args.posonlyargs + args.args
+            pairs = list(zip(positional[len(positional) - len(args.defaults):],
+                             args.defaults))
+            pairs += [(p, d) for p, d in zip(args.kwonlyargs, args.kw_defaults)]
+            for param, default in pairs:
+                if default is None:
+                    continue
+                if param.arg in jf.traced_params:
+                    continue  # traced params aren't cache keys
+                if isinstance(default, (ast.List, ast.Dict, ast.Set, ast.SetComp,
+                                        ast.ListComp, ast.DictComp)):
+                    yield self.violation(
+                        mod, default,
+                        f"static parameter `{param.arg}` of jitted "
+                        f"`{jf.qualname}` has an unhashable mutable default",
+                    )
+
+
+class HostSyncInJit(Rule):
+    """R203: host synchronization inside a jitted function."""
+
+    id = "R203"
+    title = "host sync (.item()/float()) inside a jitted function"
+    hint = (
+        "`.item()`/`float()`/`int()` on a tracer raises ConcretizationError; "
+        "keep values on device inside the jit and pull them to host at the "
+        "call site (the trainer already does `float(metrics['loss'])` "
+        "outside the step)."
+    )
+    applies = ("repro/",)
+
+    def _root_name(self, node: ast.AST) -> Optional[str]:
+        """Leftmost name of an access chain, through calls: the root of
+        ``x.sum().item()`` is ``x``."""
+        while True:
+            if isinstance(node, (ast.Attribute, ast.Subscript)):
+                node = node.value
+            elif isinstance(node, ast.Call):
+                node = node.func
+            else:
+                break
+        return node.id if isinstance(node, ast.Name) else None
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        for jf in jitted_functions(mod):
+            for stmt in _own_statements(jf.node):
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    func = node.func
+                    if (
+                        isinstance(func, ast.Attribute)
+                        and func.attr in _HOST_SYNC_METHODS
+                        and self._root_name(func.value) in jf.traced_params
+                    ):
+                        yield self.violation(
+                            mod, node,
+                            f"`.{func.attr}()` on traced "
+                            f"`{self._root_name(func.value)}` inside jitted "
+                            f"`{jf.qualname}`",
+                        )
+                    elif (
+                        isinstance(func, ast.Name)
+                        and func.id in _HOST_CAST_BUILTINS
+                        and func.id not in mod.aliases  # not shadowed by import
+                        and len(node.args) == 1
+                        and self._root_name(node.args[0]) in jf.traced_params
+                    ):
+                        yield self.violation(
+                            mod, node,
+                            f"`{func.id}(...)` host cast of traced "
+                            f"`{self._root_name(node.args[0])}` inside jitted "
+                            f"`{jf.qualname}`",
+                        )
+                    name = dotted_name(func, mod.aliases)
+                    if name == "jax.device_get":
+                        yield self.violation(
+                            mod, node,
+                            f"jax.device_get inside jitted `{jf.qualname}`",
+                        )
+
+
+RULES = [TracedPythonBranch(), BadStaticArgs(), HostSyncInJit()]

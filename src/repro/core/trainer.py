@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.checkpoint import CheckpointManager
 from repro.core.noise_scale import GradientNoiseScale
 from repro.core.schedules import Schedule
@@ -257,6 +258,10 @@ class SEBSTrainer:
             update += 1
             state = self._after_update(state, update, plan)
             loss = float(metrics["loss"])
+            if sanitize.enabled():
+                sanitize.check_finite_update(
+                    dict(metrics, loss=loss), update=update, stage=plan.stage
+                )
             # adaptive schedules (core.noise_scale.AdaptiveSEBS) consume
             # the measured loss to decide stage transitions (Eq. 8 with
             # observed ε); the GNS estimator consumes the free per-

@@ -61,6 +61,49 @@ def main() -> None:
                     help="paged: give all requests a common prompt prefix of this length")
     args = ap.parse_args()
 
+    for flag, value, low in (
+        ("--batch", args.batch, 1),
+        ("--requests", args.requests, 1),
+        ("--slots", args.slots, 1),
+        ("--patience", args.patience, 1),
+        ("--prompt-len", args.prompt_len, 1),
+        ("--new-tokens", args.new_tokens, 1),
+        ("--cache-len", args.cache_len, 1),
+        ("--page-size", args.page_size, 1),
+        ("--shared-prefix", args.shared_prefix, 0),
+        ("--top-k", args.top_k, 0),
+    ):
+        if value < low:
+            ap.error(f"{flag} must be >= {low} (got {value})")
+    if args.temperature < 0:
+        ap.error(f"--temperature must be >= 0 (got {args.temperature})")
+    if args.prompt_len + args.new_tokens > args.cache_len:
+        ap.error(
+            f"--prompt-len {args.prompt_len} + --new-tokens {args.new_tokens} "
+            f"exceeds --cache-len {args.cache_len}"
+        )
+    if args.b1 is not None and not 1 <= args.b1 <= args.slots:
+        ap.error(f"--b1 must be in [1, --slots={args.slots}] (got {args.b1})")
+    if args.b1 is not None and args.b1 < args.slots and args.rho <= 1.0:
+        ap.error(f"--rho must be > 1.0 to ramp {args.b1} -> {args.slots} slots")
+    if args.shared_prefix > args.prompt_len:
+        ap.error(
+            f"--shared-prefix {args.shared_prefix} exceeds --prompt-len {args.prompt_len}"
+        )
+    if args.chunk and any(c < 1 for c in args.chunk):
+        ap.error(f"--chunk sizes must be >= 1 (got {args.chunk})")
+    if args.pages is not None and args.pages < 2:
+        ap.error(f"--pages must be >= 2 (pool reserves scratch page 0; got {args.pages})")
+    if args.engine == "static" and args.b1 is not None:
+        ap.error("--b1 requires --engine continuous or paged")
+    if args.engine != "paged":
+        if args.pages is not None:
+            ap.error("--pages requires --engine paged")
+        if args.chunk is not None:
+            ap.error("--chunk requires --engine paged")
+        if args.shared_prefix:
+            ap.error("--shared-prefix requires --engine paged (prefix sharing)")
+
     cfg = get_config(args.arch, args.variant)
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))

@@ -91,6 +91,41 @@ def main() -> None:
 
     if args.dp_elastic and args.mesh != "none":
         ap.error("--dp-elastic builds its own per-stage data submeshes; drop --mesh")
+    from repro.optim import _REGISTRY as _OPTIMIZERS
+
+    if args.optimizer not in _OPTIMIZERS:
+        ap.error(
+            f"unknown --optimizer {args.optimizer!r}; available: {sorted(_OPTIMIZERS)}"
+        )
+    for flag, value, low in (
+        ("--b1", args.b1, 1),
+        ("--c1", args.c1, 1),
+        ("--stages", args.stages, 1),
+        ("--seq", args.seq, 1),
+        ("--ckpt-every", args.ckpt_every, 0),
+        ("--ckpt-keep", args.ckpt_keep, 1),
+        ("--local-interval", args.local_interval, 1),
+        ("--steps-log", args.steps_log, 1),
+    ):
+        if value < low:
+            ap.error(f"{flag} must be >= {low} (got {value})")
+    if args.rho <= 1.0 and args.schedule in ("sebs", "classical") and args.stages > 1:
+        ap.error(f"--rho must be > 1.0 for a multi-stage {args.schedule} ladder")
+    if args.ckpt_every and not args.ckpt_dir:
+        ap.error("--ckpt-every has no effect without --ckpt-dir")
+    if args.stop_after is not None and args.stop_after < 1:
+        ap.error(f"--stop-after must be >= 1 (got {args.stop_after})")
+    if args.device_budget is not None and args.device_budget < 1:
+        ap.error(f"--device-budget must be >= 1 (got {args.device_budget})")
+    if args.local_growth < 1.0:
+        ap.error(f"--local-growth must be >= 1.0 (got {args.local_growth})")
+    if not args.dp_elastic:
+        # flags that would otherwise be silently ignored
+        defaults = {"sync_mode": "exact", "device_budget": None,
+                    "local_interval": 4, "local_growth": 1.0}
+        for dest, default in defaults.items():
+            if getattr(args, dest) != default:
+                ap.error(f"--{dest.replace('_', '-')} requires --dp-elastic")
 
     mesh = None
     if args.mesh != "none":

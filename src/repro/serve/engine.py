@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.models.lm import LanguageModel
 from repro.serve.pages import (
     PagePool,
@@ -274,6 +275,8 @@ class ContinuousBatchingEngine:
                 completed[req.id] = req.tokens()
                 slots.release(i)
 
+        if sanitize.enabled():
+            sanitize.audit_engine_compiles(self, where="(run end)")
         return completed
 
     def latencies(self) -> Dict[int, float]:
@@ -432,6 +435,14 @@ class PagedContinuousBatchingEngine:
             self.prefill_compiles += 1
         return self._chunk_steps[size]
 
+    # -- sanitizer seam ------------------------------------------------------
+    def _audit_pages(self, slots: PagedSlotManager, where: str) -> None:
+        """REPRO_SANITIZE=1 hook: exact refcount reconstruction after every
+        pool-mutating transition (admit / publish / finish)."""
+        if sanitize.enabled():
+            plans = [s.plan for s in slots.slots if not s.free]
+            sanitize.audit_page_pool(self.pool, self.index, plans, where=where)
+
     # -- admission -----------------------------------------------------------
     def _admit(self, slots: PagedSlotManager, i: int, req, memory_buf):
         total = len(req.prompt) + req.max_new_tokens
@@ -456,6 +467,7 @@ class PagedContinuousBatchingEngine:
         slots.admit(i, req, plan)
         self.stats["prefix_tokens_reused"] += plan.reuse_len
         self.stats["prompt_tokens_total"] += len(req.prompt)
+        self._audit_pages(slots, where=f"after admit(slot {i})")
         return plan, memory_buf
 
     def _sample_first(self, req, logits):
@@ -475,6 +487,7 @@ class PagedContinuousBatchingEngine:
         self.scheduler.finish(req)
         completed[req.id] = req.tokens()
         slots.release(i)
+        self._audit_pages(slots, where=f"after release(slot {i})")
 
     def _maybe_publish(self, slots: PagedSlotManager, i: int):
         slot = slots.slots[i]
@@ -482,6 +495,7 @@ class PagedContinuousBatchingEngine:
             return
         publish_prefix(self.index, slot.request.prompt, slot.plan.pages)
         slot.published = True
+        self._audit_pages(slots, where=f"after publish(slot {i})")
 
     # -- the serve loop ------------------------------------------------------
     def run(self) -> Dict[int, np.ndarray]:
@@ -604,6 +618,8 @@ class PagedContinuousBatchingEngine:
                 if not slots.slots[i].free:
                     self._maybe_publish(slots, i)
 
+        if sanitize.enabled():
+            sanitize.audit_engine_compiles(self, where="(run end)")
         return completed
 
     # -- reporting -----------------------------------------------------------

@@ -145,17 +145,26 @@ class RadixPrefixIndex:
             child.last_used = now
             full.append(child.page)
             node, i = child, i + ps
-        # token-granular partial match at the divergence page
+        # token-granular partial match at the divergence page. The winner is
+        # canonical — longest agreement, then lowest page id — NOT the dict
+        # iteration (= publish) order: two runs that published equally-deep
+        # divergence pages in a different order must still plan identical
+        # COW sources, or replayed admissions stop being reproducible.
         rest = tuple(tokens[i:])
         best: Optional[Tuple[int, int]] = None
+        best_node: Optional[_Node] = None
         if rest:
             for chunk, child in node.children.items():
                 d = 0
                 while d < len(rest) and chunk[d] == rest[d]:
                     d += 1
-                if d > 0 and (best is None or d > best[1]):
+                if d > 0 and (
+                    best is None or d > best[1] or (d == best[1] and child.page < best[0])
+                ):
                     best = (child.page, d)
-                    child.last_used = now
+                    best_node = child
+            if best_node is not None:
+                best_node.last_used = now
         return full, best
 
     def insert(self, tokens, pages: List[int]) -> int:

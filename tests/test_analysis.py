@@ -1,0 +1,496 @@
+"""repro-lint analyzer + runtime sanitizer tests.
+
+Three layers:
+
+1. per-rule fixtures — a minimal positive (fires) and negative (stays
+   silent) snippet for every rule, run through ``lint_source`` so the
+   fixture's virtual path exercises the rule's real scoping;
+2. framework behaviour — suppression comments, justification handling,
+   fix-it hint text, the CLI's exit codes;
+3. runtime sanitizers — NaN tripwire, compile-counter, PagePool auditor
+   against hand-corrupted state (no jax required: the sanitizers are
+   duck-typed and the pool is host-only).
+
+Plus the self-scan: the live tree must lint clean, so a regression in the
+tree OR an over-eager new rule fails here first.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import contracts, sanitize
+from repro.analysis.core import all_rules, lint_paths, lint_source
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def rules_fired(source: str, rel: str):
+    return sorted({v.rule for v in lint_source(source, rel=rel).violations})
+
+
+# ---------------------------------------------------------------------------
+# R1xx determinism
+# ---------------------------------------------------------------------------
+
+
+def test_r101_flags_backend_ordered_collectives():
+    src = "import jax\ndef f(g):\n    return jax.lax.psum(g, 'data')\n"
+    assert "R101" in rules_fired(src, "repro/train/x.py")
+    # same code outside the bit-identity paths is not R101's business
+    assert "R101" not in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r101_resolves_import_aliases():
+    src = "from jax import lax\ndef f(g):\n    return lax.pmean(g, 'b')\n"
+    assert "R101" in rules_fired(src, "repro/distributed/x.py")
+
+
+def test_r101_negative_all_gather_is_deterministic():
+    src = "import jax\ndef f(g):\n    return jax.lax.all_gather(g, 'b')\n"
+    assert "R101" not in rules_fired(src, "repro/distributed/x.py")
+
+
+def test_r102_flags_set_iteration():
+    assert "R102" in rules_fired(
+        "def f(xs):\n    for x in set(xs):\n        pass\n", "repro/core/x.py"
+    )
+    assert "R102" in rules_fired(
+        "def f():\n    return [x for x in {1, 2}]\n", "repro/core/x.py"
+    )
+
+
+def test_r102_negative_sorted_set():
+    assert "R102" not in rules_fired(
+        "def f(xs):\n    for x in sorted(set(xs)):\n        pass\n", "repro/core/x.py"
+    )
+
+
+def test_r103_flags_wall_clock_and_global_rng():
+    assert "R103" in rules_fired(
+        "import time\ndef f():\n    return time.time()\n", "repro/checkpoint/x.py"
+    )
+    assert "R103" in rules_fired(
+        "import random\ndef f():\n    return random.random()\n", "repro/data/x.py"
+    )
+    assert "R103" in rules_fired(
+        "import numpy as np\ndef f():\n    return np.random.rand(3)\n",
+        "repro/train/x.py",
+    )
+
+
+def test_r103_negative_seeded_generator_and_scope():
+    src = "import numpy as np\ndef f(seed):\n    return np.random.default_rng(seed)\n"
+    assert "R103" not in rules_fired(src, "repro/data/x.py")
+    # wall-clock in benchmarks/launchers is fine — nothing checkpointed there
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert "R103" not in rules_fired(src, "repro/launch/x.py")
+
+
+def test_r104_flags_dict_order_fold():
+    src = (
+        "import jax\n"
+        "def f(key, d):\n"
+        "    for k, v in d.items():\n"
+        "        key = jax.random.fold_in(key, v)\n"
+        "    return key\n"
+    )
+    assert "R104" in rules_fired(src, "repro/train/x.py")
+
+
+def test_r104_negative_sorted_items():
+    src = (
+        "import jax\n"
+        "def f(key, d):\n"
+        "    for k in sorted(d):\n"
+        "        key = jax.random.fold_in(key, d[k])\n"
+        "    return key\n"
+    )
+    assert "R104" not in rules_fired(src, "repro/train/x.py")
+
+
+# ---------------------------------------------------------------------------
+# R2xx trace hazards
+# ---------------------------------------------------------------------------
+
+JIT_BRANCH = (
+    "import jax\n"
+    "def step(x):\n"
+    "    if x > 0:\n"
+    "        return x\n"
+    "    return -x\n"
+    "step = jax.jit(step)\n"
+)
+
+
+def test_r201_flags_python_branch_on_traced_value():
+    assert "R201" in rules_fired(JIT_BRANCH, "repro/serve/x.py")
+
+
+def test_r201_decorated_and_partial_forms():
+    src = "import jax\n@jax.jit\ndef step(x):\n    while x > 0:\n        x = x - 1\n    return x\n"
+    assert "R201" in rules_fired(src, "repro/serve/x.py")
+    src = (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('n',))\n"
+        "def step(x, n):\n"
+        "    if n > 3:\n"  # static arg: host-side branch is fine
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert "R201" not in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r201_negative_is_none_check():
+    src = (
+        "import jax\n"
+        "def step(x, memory):\n"
+        "    if memory is None:\n"
+        "        return x\n"
+        "    return x + memory\n"
+        "step = jax.jit(step)\n"
+    )
+    assert "R201" not in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r202_flags_computed_and_unhashable_static_args():
+    src = "import jax\ndef build(fn, n):\n    return jax.jit(fn, static_argnums=n)\n"
+    assert "R202" in rules_fired(src, "repro/serve/x.py")
+    src = (
+        "import jax\n"
+        "def step(x, cfg=[1]):\n"
+        "    return x\n"
+        "step = jax.jit(step, static_argnames=('cfg',))\n"
+    )
+    assert "R202" in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r202_negative_literal_static_args():
+    src = "import jax\ndef build(fn):\n    return jax.jit(fn, static_argnums=(1, 2))\n"
+    assert "R202" not in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r203_flags_host_sync_in_jit():
+    src = "import jax\ndef step(x):\n    return float(x)\nstep = jax.jit(step)\n"
+    assert "R203" in rules_fired(src, "repro/serve/x.py")
+    src = "import jax\ndef step(x):\n    return x.sum().item()\nstep = jax.jit(step)\n"
+    assert "R203" in rules_fired(src, "repro/serve/x.py")
+
+
+def test_r203_negative_host_sync_outside_jit():
+    src = "def caller(metrics):\n    return float(metrics['loss'])\n"
+    assert "R203" not in rules_fired(src, "repro/core/x.py")
+
+
+# ---------------------------------------------------------------------------
+# R3xx compile stability
+# ---------------------------------------------------------------------------
+
+
+def test_r301_flags_undeclared_jit_in_enforced_path():
+    src = "import jax\ndef rogue(fn):\n    return jax.jit(fn)\n"
+    assert "R301" in rules_fired(src, "repro/serve/step.py")
+    # outside the enforced paths, undeclared jit is fine (kernels ops, tools)
+    assert "R301" not in rules_fired(src, "repro/kernels/foo/ops.py")
+
+
+def test_r301_negative_registered_builder():
+    src = "import jax\ndef build_decode_step(model):\n    def step(p, t):\n        return t\n    return jax.jit(step)\n"
+    assert "R301" not in rules_fired(src, "repro/serve/step.py")
+
+
+def test_r302_stale_registry_entry_fails():
+    # a serve/step.py without the declared builders must trip the cross-check
+    from repro.analysis.core import load_source
+    from repro.analysis.rules_compile import check_registry
+
+    mod = load_source(
+        "import jax\ndef build_decode_step(model):\n    return jax.jit(model)\n",
+        path="repro/serve/step.py",
+        rel="repro/serve/step.py",
+    )
+    stale = {v.rule for v in check_registry([mod])}
+    assert stale == {"R302"}
+
+
+def test_registry_matches_live_tree():
+    """Every declared bucket resolves against the actual module it names."""
+    from repro.analysis.core import load_file
+    from repro.analysis.rules_compile import check_registry
+
+    mods = [
+        load_file(REPO / "src" / m, rel=m) for m in contracts.modules_declared()
+    ]
+    assert check_registry(mods) == []
+
+
+# ---------------------------------------------------------------------------
+# R4xx Pallas kernel contracts
+# ---------------------------------------------------------------------------
+
+PALLAS_PREAMBLE = "from jax.experimental import pallas as pl\n"
+
+
+def test_r401_flags_arity_mismatch():
+    src = PALLAS_PREAMBLE + (
+        "def f(x, interpret):\n"
+        "    return pl.pallas_call(k, grid=(4, 4),\n"
+        "        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],\n"
+        "        interpret=interpret)(x)\n"
+    )
+    assert "R401" in rules_fired(src, "repro/kernels/foo/kernel.py")
+
+
+def test_r401_negative_defaulted_lambda_args_and_assigned_grid():
+    src = PALLAS_PREAMBLE + (
+        "def f(x, g, interpret):\n"
+        "    grid = (4, 4)\n"
+        "    return pl.pallas_call(k, grid=grid,\n"
+        "        in_specs=[pl.BlockSpec((8,), lambda i, j, gg=g: (i, j))],\n"
+        "        interpret=interpret)(x)\n"
+    )
+    assert "R401" not in rules_fired(src, "repro/kernels/foo/kernel.py")
+
+
+def test_r402_flags_missing_or_hardwired_interpret():
+    src = PALLAS_PREAMBLE + "def f(x):\n    return pl.pallas_call(k, grid=(4,))(x)\n"
+    assert "R402" in rules_fired(src, "repro/kernels/foo/kernel.py")
+    src = PALLAS_PREAMBLE + (
+        "def f(x):\n    return pl.pallas_call(k, grid=(4,), interpret=False)(x)\n"
+    )
+    assert "R402" in rules_fired(src, "repro/kernels/foo/kernel.py")
+
+
+def test_r403_flags_unguarded_floordiv_grid():
+    src = PALLAS_PREAMBLE + (
+        "def f(x, b, interpret):\n"
+        "    return pl.pallas_call(k, grid=(x.shape[0] // b,), interpret=interpret)(x)\n"
+    )
+    assert "R403" in rules_fired(src, "repro/kernels/foo/kernel.py")
+
+
+def test_r403_negative_assert_and_ceil_pad_idioms():
+    src = PALLAS_PREAMBLE + (
+        "def f(x, b, interpret):\n"
+        "    assert x.shape[0] % b == 0\n"
+        "    return pl.pallas_call(k, grid=(x.shape[0] // b,), interpret=interpret)(x)\n"
+    )
+    assert "R403" not in rules_fired(src, "repro/kernels/foo/kernel.py")
+    src = PALLAS_PREAMBLE + (
+        "def f(x, b, interpret):\n"
+        "    rows = -(-x.shape[0] // b) * b\n"
+        "    return pl.pallas_call(k, grid=(rows // b,), interpret=interpret)(x)\n"
+    )
+    assert "R403" not in rules_fired(src, "repro/kernels/foo/kernel.py")
+
+
+# ---------------------------------------------------------------------------
+# framework: suppressions, hints, CLI
+# ---------------------------------------------------------------------------
+
+SUPPRESSED = (
+    "import jax\n"
+    "def f(g):\n"
+    "    return jax.lax.psum(g, 'b')  # repro-lint: disable=R101 -- fixed width\n"
+)
+
+
+def test_suppression_with_justification():
+    res = lint_source(SUPPRESSED, rel="repro/train/x.py")
+    assert res.violations == []
+    assert [(s.rule, s.justification) for s in res.suppressions] == [
+        ("R101", "fixed width")
+    ]
+
+
+def test_suppression_without_justification_recorded_as_bare():
+    src = SUPPRESSED.replace(" -- fixed width", "")
+    res = lint_source(src, rel="repro/train/x.py")
+    assert res.violations == []
+    assert res.suppressions[0].justification is None  # --strict rejects this
+
+
+def test_file_level_suppression_and_disable_all():
+    src = "# repro-lint: disable-file=R101 -- vendored\n" + (
+        "import jax\ndef f(g):\n    return jax.lax.psum(g, 'b')\n"
+    )
+    assert lint_source(src, rel="repro/train/x.py").violations == []
+    src = (
+        "import jax\n"
+        "def f(g):\n"
+        "    return jax.lax.psum(g, 'b')  # repro-lint: disable=all -- generated\n"
+    )
+    assert lint_source(src, rel="repro/train/x.py").violations == []
+
+
+def test_suppression_does_not_leak_to_other_lines():
+    src = SUPPRESSED + "def g(h):\n    return jax.lax.psum(h, 'b')\n"
+    res = lint_source(src, rel="repro/train/x.py")
+    assert [v.rule for v in res.violations] == ["R101"]
+
+
+def test_every_rule_has_id_title_and_hint():
+    rules = all_rules()
+    ids = [r.id for r in rules]
+    assert len(ids) == len(set(ids)), "duplicate rule ids"
+    for rule in rules:
+        assert rule.id.startswith("R") and len(rule.id) == 4
+        assert rule.title and rule.hint, f"{rule.id} missing title/hint"
+
+
+def test_violation_format_carries_hint():
+    res = lint_source(JIT_BRANCH, rel="repro/serve/x.py")
+    text = "\n".join(v.format() for v in res.violations)
+    assert "R201" in text and "hint: " in text and "jax.lax.cond" in text
+
+
+def test_self_scan_tree_is_clean():
+    """The acceptance gate, as a test: src/repro lints clean under the full
+    rule set (including the registry cross-check)."""
+    res = lint_paths([REPO / "src" / "repro"], registry_check=True)
+    assert res.errors == []
+    assert res.violations == [], "\n".join(v.format() for v in res.violations)
+    # the tree's own suppressions must all carry justifications
+    bare = [s for s in res.suppressions if not s.justification]
+    assert bare == [], bare
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "repro" / "train" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax\ndef f(g):\n    return jax.lax.psum(g, 'b')\n")
+    cmd = [sys.executable, str(REPO / "tools" / "lint.py"), "--strict"]
+    proc = subprocess.run(
+        cmd + [str(tmp_path)], capture_output=True, text=True, check=False
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "R101" in proc.stdout
+    good = tmp_path / "repro" / "train" / "bad.py"
+    good.write_text("def f(g):\n    return g\n")
+    proc = subprocess.run(
+        cmd + [str(tmp_path)], capture_output=True, text=True, check=False
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers
+# ---------------------------------------------------------------------------
+
+
+def test_sanitize_enabled_is_env_gated(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize.enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+
+
+def test_nan_tripwire():
+    sanitize.check_finite_update({"loss": 1.25, "grad_norm": 0.5}, update=3, stage=1)
+    with pytest.raises(sanitize.SanitizerError, match="update 7"):
+        sanitize.check_finite_update({"loss": float("nan")}, update=7, stage=2)
+    with pytest.raises(sanitize.SanitizerError, match="grad_norm"):
+        sanitize.check_finite_update(
+            {"loss": 0.1, "grad_norm": float("inf")}, update=1, stage=0
+        )
+    # unknown / non-scalar keys are ignored, not crashed on
+    sanitize.check_finite_update({"other": object()}, update=1, stage=0)
+
+
+def test_page_pool_auditor_accepts_consistent_state():
+    from repro.serve.pages import PagePool, RadixPrefixIndex, plan_admission
+
+    pool = PagePool(12, 4)
+    index = RadixPrefixIndex(pool)
+    plan = plan_admission(pool, index, [1, 2, 3, 4, 5], 8, share=True)
+    sanitize.audit_page_pool(pool, index, [plan], where="(test)")
+
+
+def test_page_pool_auditor_catches_refcount_drift():
+    from repro.serve.pages import PagePool, plan_admission
+
+    pool = PagePool(12, 4)
+    plan = plan_admission(pool, None, [1, 2, 3, 4, 5], 8, share=False)
+    pool.refs[plan.new_pages[0]] += 1  # seeded corruption: a leaked retain
+    with pytest.raises(sanitize.SanitizerError, match="refcount drift"):
+        sanitize.audit_page_pool(pool, None, [plan], where="(test)")
+
+
+def test_page_pool_auditor_catches_structural_breakage():
+    from repro.serve.pages import PagePool
+
+    pool = PagePool(8, 2)
+    pool._free.append(pool._free[-1])  # double entry on the free list
+    with pytest.raises(sanitize.SanitizerError, match="structure broken"):
+        sanitize.audit_page_pool(pool, None, [], where="(test)")
+
+
+class _FakeStep:
+    def __init__(self, n=1):
+        self._n = n
+
+    def _cache_size(self):
+        return self._n
+
+
+class _FakeAdmission:
+    def __init__(self, ladder):
+        self.ladder = ladder
+
+
+class _FakeEngine:
+    def __init__(self, widths=(2, 4), ladder=(2, 4, 8), chunks=(32,), sizes=()):
+        self.admission = _FakeAdmission(list(ladder))
+        self._decodes = {w: _FakeStep() for w in widths}
+        self.prefill_chunks = tuple(chunks)
+        self._chunk_steps = {s: _FakeStep() for s in sizes}
+        self.decode_compiles = len(self._decodes)
+        self.prefill_compiles = len(self._chunk_steps)
+
+
+def test_compile_audit_accepts_declared_buckets():
+    sanitize.audit_engine_compiles(_FakeEngine(widths=(2, 4), sizes=(32,)))
+
+
+def test_compile_audit_rejects_stray_width():
+    with pytest.raises(sanitize.SanitizerError, match="outside the admission ladder"):
+        sanitize.audit_engine_compiles(_FakeEngine(widths=(2, 3)))
+
+
+def test_compile_audit_rejects_recompile_storm():
+    eng = _FakeEngine(widths=(2,))
+    eng._decodes[2] = _FakeStep(n=5)
+    with pytest.raises(sanitize.SanitizerError, match="5 executables"):
+        sanitize.audit_engine_compiles(eng)
+
+
+def test_compile_audit_rejects_undeclared_chunk():
+    eng = _FakeEngine(chunks=(32,), sizes=(32, 64))
+    with pytest.raises(sanitize.SanitizerError, match="prefill_chunks"):
+        sanitize.audit_engine_compiles(eng)
+
+
+def test_compile_counter_context_manager():
+    eng = _FakeEngine(widths=(2,))
+    with sanitize.compile_counter(eng) as ctr:
+        eng._decodes[4] = _FakeStep()
+        eng.decode_compiles += 1
+    assert ctr.new_compiles == 1
+    eng._decodes[3] = _FakeStep()  # stray width: audited at exit
+    with pytest.raises(sanitize.SanitizerError):
+        with sanitize.compile_counter(eng):
+            pass
+
+
+def test_contracts_registry_shape():
+    keys = [b.key for b in contracts.COMPILE_BUCKETS]
+    assert len(keys) == len(set(keys)), "duplicate bucket keys"
+    for bucket in contracts.COMPILE_BUCKETS:
+        assert contracts.enforced(bucket.module), bucket.key
+        assert bucket.cardinality, f"{bucket.key} missing a cardinality statement"
+        assert (REPO / "src" / bucket.module).exists(), bucket.module

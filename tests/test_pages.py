@@ -170,6 +170,34 @@ def test_radix_match_and_cow_semantics():
     pool.check()
 
 
+def test_partial_match_tie_break_is_publish_order_independent():
+    """Regression (repro-lint R1 era): when two published divergence pages
+    agree with the prompt on the same number of leading tokens, ``match``
+    must pick a canonical winner (lowest page id), not whichever sibling was
+    published first — COW sources must not depend on dict insertion order."""
+    chain_a = [1, 2, 3, 4, 5, 6, 7, 8]  # pages: (1,2,3,4) then (5,6,7,8)
+    chain_b = [1, 2, 3, 4, 5, 6, 9, 9]  # shares page 1, diverges in page 2
+    probe = [1, 2, 3, 4, 5, 6, 0]  # ties: d=2 against both divergence pages
+
+    def build(first, second):
+        pool = PagePool(16, 4)
+        index = RadixPrefixIndex(pool)
+        pages = {"a": [1, 4], "b": [2, 3]}  # a's divergence page id > b's
+        assert pool.alloc(4) == [1, 2, 3, 4]
+        for name in (first, second):
+            index.insert({"a": chain_a, "b": chain_b}[name], pages[name])
+        return index
+
+    results = {
+        order: build(*order).match(probe) for order in (("a", "b"), ("b", "a"))
+    }
+    (full_ab, partial_ab), (full_ba, partial_ba) = results.values()
+    # the shared first chunk keeps its first publisher's page (a: 1, b: 2)
+    assert (full_ab, full_ba) == ([1], [2])
+    assert partial_ab == partial_ba, "COW source depends on publish order"
+    assert partial_ab == (3, 2), "tie must resolve to the lowest page id"
+
+
 def test_eviction_respects_live_references():
     """LRU eviction only reclaims pages whose sole reference is the index's;
     pages aliased by a live plan survive any amount of pressure."""

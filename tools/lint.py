@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""repro-lint CLI — run the repo's static-analysis rules over source paths.
+
+Usage::
+
+    PYTHONPATH=src python tools/lint.py src/repro            # report mode
+    PYTHONPATH=src python tools/lint.py --strict src/repro   # CI mode
+    PYTHONPATH=src python tools/lint.py --list-rules
+
+Exit codes: 0 clean, 1 violations (or, under ``--strict``, unparsable files
+/ unjustified suppressions), 2 internal error.
+
+``--strict`` is what CI runs: it also enables the compile-bucket registry
+cross-check (R302) — kept out of plain mode so linting a single file never
+demands the whole tree — and requires every ``# repro-lint: disable=``
+comment to carry a ``-- justification`` tail.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.analysis.core import all_rules, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-lint", description=__doc__)
+    ap.add_argument("paths", nargs="*", type=Path, help="files or directories to lint")
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="CI mode: registry cross-check, fail on unparsable files and "
+        "on suppressions without a justification",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule table and exit"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.title}")
+            print(f"      hint: {rule.hint}")
+        return 0
+
+    if not args.paths:
+        ap.error("no paths given (try: tools/lint.py src/repro)")
+    missing = [p for p in args.paths if not p.exists()]
+    if missing:
+        ap.error(f"no such path: {', '.join(str(p) for p in missing)}")
+
+    result = lint_paths(args.paths, registry_check=args.strict)
+
+    failed = False
+    for violation in result.violations:
+        print(violation.format())
+        failed = True
+    for err in result.errors:
+        print(f"error: cannot parse {err}")
+        if args.strict:
+            failed = True
+    if args.strict:
+        for sup in result.suppressions:
+            if not sup.justification:
+                print(
+                    f"{sup.path}:{sup.line}: {sup.rule} suppressed without a "
+                    "justification (--strict requires `-- reason` tails)"
+                )
+                failed = True
+
+    n_sup = len(result.suppressions)
+    print(
+        f"repro-lint: {result.files_checked} file(s), "
+        f"{len(result.violations)} violation(s), {n_sup} suppression(s)"
+        + (f", {len(result.errors)} parse error(s)" if result.errors else "")
+    )
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
