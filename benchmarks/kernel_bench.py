@@ -20,6 +20,9 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gla.ops import gla_chunked
 from repro.kernels.gla.ref import gla_ref
+from repro.kernels.paged_decode import ops as paged_ops
+from repro.kernels.paged_decode import ref as paged_ref
+from repro.serve.step import sample_tokens
 
 
 def _time(fn, *args, n=3):
@@ -81,6 +84,57 @@ def run(out_dir: str = "benchmarks/results") -> List[Record]:
         "gla_kernel_interpret_max_err", err, "max_abs_err", direction="lower",
         derived=f"max_err={err:.1e} chunk=128",
         context={"chunk": 128, "tolerance": 9.0},
+    ))
+
+    # paged flash decode: time the XLA gather-then-attend serving path
+    # (the baseline the Pallas kernel replaces on TPU), then the kernel's
+    # interpret-mode correctness vs the same oracle
+    B, MP, PS, HQ, HKV, D = 8, 16, 16, 4, 2, 64  # 256 tokens/slot
+    rng = np.random.default_rng(2)
+    num_pages = 1 + B * MP
+    kp = jnp.asarray(rng.normal(size=(num_pages, PS, HKV, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(num_pages, PS, HKV, D)), jnp.float32)
+    table = jnp.asarray(
+        1 + rng.permutation(B * MP).reshape(B, MP).astype(np.int32)
+    )
+    pos = jnp.asarray(rng.integers(0, MP * PS, B), jnp.int32)
+    pq = jnp.asarray(rng.normal(size=(B, HQ, D)), jnp.float32)
+    gather_fn = jax.jit(paged_ref.paged_attention_ref)
+    t_gather = _time(gather_fn, pq, kp, vp, table, pos)
+    records.append(Record(
+        "paged_decode_gather_jnp_b8", t_gather, "us/call", direction="lower",
+        derived="XLA gather + sdpa (serve decode tick, paged engine)",
+        context={"slots": B, "pages_per_slot": MP, "page_size": PS,
+                 "q_heads": HQ, "kv_heads": HKV, "head_dim": D},
+    ))
+    out = paged_ops.paged_flash_decode(pq, kp, vp, table, pos)
+    ref_out = paged_ref.paged_attention_ref(pq, kp, vp, table, pos)
+    err = float(jnp.abs(out - ref_out).max())
+    # VMEM per grid step: q/o (G, D) + one KV page pair + f32 accumulators
+    vmem_kb = ((HQ // HKV) * D * 2 + PS * D * 2 + (HQ // HKV) * (D + 2)) * 4 / 1024
+    records.append(Record(
+        "paged_decode_kernel_interpret_max_err", err, "max_abs_err",
+        direction="lower",
+        derived=f"max_err={err:.1e} blockspec_vmem~{vmem_kb:.0f}KiB",
+        context={"blockspec_vmem_kib": vmem_kb, "page_size": PS,
+                 "tolerance": 9.0},
+    ))
+
+    # fused sampler: must be BIT-identical to serve/step.py's sample_tokens
+    # (zero tolerance — any mismatch silently changes served streams)
+    logits = jnp.asarray(rng.normal(size=(64, 512)) * 4, jnp.float32)
+    temp = jnp.asarray(rng.choice([0.0, 0.3, 0.7, 1.0, 1.5], 64), jnp.float32)
+    top_k = jnp.asarray(rng.choice([0, 1, 5, 50, 512], 64), jnp.int32)
+    key = jax.random.key(3)
+    mismatches = int(
+        (paged_ops.fused_sample(logits, key, temp, top_k)
+         != sample_tokens(logits, key, temp, top_k)).sum()
+    )
+    records.append(Record(
+        "fused_sample_token_mismatches", mismatches, "tokens",
+        direction="exact",
+        derived="fused logits->token kernel vs step.sample_tokens, 64 rows",
+        context={"rows": 64, "vocab": 512},
     ))
     return records
 

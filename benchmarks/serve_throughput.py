@@ -12,6 +12,13 @@ arriving at t=0):
   :class:`ContinuousBatchingEngine`; freed slots are recycled
   mid-decode-loop and the slot budget ramps stagewise (b₁ρˢ) under
   sustained load.
+- ``paged_xla`` / ``paged_pallas``: :class:`PagedContinuousBatchingEngine`
+  under both decode-kernel paths. The pallas row runs the interpret-mode
+  lowering on this host (pallas under jit lowers to XLA ops off-TPU), so its
+  absolute number is a liveness/trajectory signal, not the TPU win — the
+  kernel's on-TPU claim is gated by the correctness records in
+  ``kernel_bench`` instead. The pallas case runs at the light load only to
+  keep the CI subset cheap.
 
 Compilation is excluded from both timings via a warmup pass that visits
 every decode shape; the continuous engine's per-stage compile cache is kept
@@ -32,7 +39,11 @@ import numpy as np
 from benchmarks._schema import Record, print_csv
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ContinuousBatchingEngine, ServeEngine
+from repro.serve import (
+    ContinuousBatchingEngine,
+    PagedContinuousBatchingEngine,
+    ServeEngine,
+)
 
 ARCH = "qwen2.5-3b"
 PROMPT_LEN = 8
@@ -40,6 +51,8 @@ NEW_TOKENS = 16
 CACHE_LEN = 64
 SLOTS = 4  # static batch size == continuous max ring width
 LOADS = (4, 16)
+PAGE_SIZE = 8
+PALLAS_LOAD = 4  # interpret-mode pallas case runs at the light load only
 
 
 def _prompts(cfg, n: int, key: int = 1) -> np.ndarray:
@@ -104,6 +117,26 @@ def _bench_continuous(model, params, prompts) -> tuple[float, list]:
     return elapsed, lat
 
 
+def _bench_paged(model, params, prompts, kernel: str) -> tuple[float, list]:
+    engine = PagedContinuousBatchingEngine(
+        model, params, cache_len=CACHE_LEN, max_slots=SLOTS, b1=1, rho=2.0,
+        patience=1, page_size=PAGE_SIZE, prefill_chunks=(PROMPT_LEN,),
+        kernel=kernel,
+    )
+    for p in prompts:  # warmup: visits every stage width + chunk bucket
+        engine.submit(p, max_new_tokens=NEW_TOKENS)
+    engine.run()
+    engine.admission.reset()
+    engine.reset_stats()
+
+    t0 = time.perf_counter()
+    ids = [engine.submit(p, max_new_tokens=NEW_TOKENS) for p in prompts]
+    engine.run()
+    elapsed = time.perf_counter() - t0
+    lat = [engine.scheduler.requests[r].latency for r in ids]
+    return elapsed, lat
+
+
 def run(out_dir: str = "benchmarks/results") -> List[Record]:
     cfg = get_config(ARCH, "smoke")
     model = build_model(cfg)
@@ -113,8 +146,17 @@ def run(out_dir: str = "benchmarks/results") -> List[Record]:
     for load in LOADS:
         prompts = _prompts(cfg, load)
         total_tokens = load * NEW_TOKENS
-        for name, bench in (("static", _bench_static), ("continuous", _bench_continuous)):
-            elapsed, lat = bench(model, params, prompts)
+        benches = [
+            ("static", lambda p: _bench_static(model, params, p)),
+            ("continuous", lambda p: _bench_continuous(model, params, p)),
+            ("paged_xla", lambda p: _bench_paged(model, params, p, "xla")),
+        ]
+        if load == PALLAS_LOAD:
+            benches.append(
+                ("paged_pallas", lambda p: _bench_paged(model, params, p, "pallas"))
+            )
+        for name, bench in benches:
+            elapsed, lat = bench(prompts)
             tps = total_tokens / elapsed
             p50, p99 = _pct(lat, 50), _pct(lat, 99)
             details["results"].append(

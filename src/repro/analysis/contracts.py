@@ -30,6 +30,7 @@ ENFORCED_JIT_PATHS: Tuple[str, ...] = (
     "repro/serve/",
     "repro/train/",
     "repro/distributed/",
+    "repro/kernels/paged_decode/",  # serving hot path: ops.py builders only
 )
 
 
@@ -76,6 +77,24 @@ COMPILE_BUCKETS: Tuple[CompileBucket, ...] = (
         "PagedContinuousBatchingEngine.__init__",
         "three fixed-shape helpers per engine (page copy, state-row zero, "
         "encoder), one executable each",
+    ),
+    # -- serving kernels (paged flash decode; interpret off-TPU) ------------
+    CompileBucket(
+        "kernels.paged.decode", "repro/kernels/paged_decode/ops.py",
+        "build_paged_flash_decode",
+        "one executable per (pool geometry, head layout, window/softcap) — "
+        "in practice one per model, shared across ring widths via batch dim",
+    ),
+    CompileBucket(
+        "kernels.paged.prefill", "repro/kernels/paged_decode/ops.py",
+        "build_paged_chunk_prefill",
+        "one executable per declared prefill_chunks bucket (chunk size is in "
+        "the query shape)",
+    ),
+    CompileBucket(
+        "kernels.paged.sample", "repro/kernels/paged_decode/ops.py",
+        "build_fused_sample",
+        "one executable per (ring width, vocab) decode shape",
     ),
     # -- training -----------------------------------------------------------
     CompileBucket(

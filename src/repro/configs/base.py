@@ -122,6 +122,8 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     use_flash_kernel: bool = False  # Pallas path (TPU target; interpret on CPU)
+    decode_kernel: str = "xla"  # paged serve attention/sampler: "xla" (gather
+    #   + einsum) or "pallas" (kernels/paged_decode; interpret on CPU)
     remat: bool = True
     remat_policy: str = "nothing_saveable"  # see models/blocks.py REMAT_POLICIES
     tp_reduce_scatter: bool = False  # constrain mixer/FFN outputs to the

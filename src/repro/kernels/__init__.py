@@ -7,7 +7,11 @@
 #                      dual-averaging AdaGrad) fused into one HBM round-trip
 #                      over each weight shard;
 #   gla/             — chunked gated-linear-attention scan shared by the
-#                      Mamba2 (SSD) and RWKV6 mixers.
+#                      Mamba2 (SSD) and RWKV6 mixers;
+#   paged_decode/    — paged flash-decode + chunked prefill for the serving
+#                      engine (page-table gather fused via scalar prefetch)
+#                      and the fused logits→sample kernel, all behind the
+#                      paged engine's kernel="pallas" switch.
 #
 # TPU is the TARGET; on this CPU container the kernels are validated in
 # interpret=True mode (the kernel body runs step-by-step in Python).

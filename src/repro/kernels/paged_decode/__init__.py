@@ -1,0 +1,8 @@
+# Paged flash-decode + fused sampling kernels for the serving hot path:
+# kernel.py (Pallas, page-table gather fused via scalar prefetch), ops.py
+# (jit'd public wrappers), ref.py (pure-jnp oracles for the allclose tests).
+from repro.kernels.paged_decode.ops import (  # noqa: F401
+    fused_sample,
+    paged_chunk_prefill,
+    paged_flash_decode,
+)

@@ -59,6 +59,9 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="paged: give all requests a common prompt prefix of this length")
+    ap.add_argument("--kernel", choices=["xla", "pallas"], default="xla",
+                    help="paged: decode attention/sampler path (pallas = "
+                         "kernels/paged_decode; interpret mode off-TPU)")
     args = ap.parse_args()
 
     for flag, value, low in (
@@ -103,6 +106,8 @@ def main() -> None:
             ap.error("--chunk requires --engine paged")
         if args.shared_prefix:
             ap.error("--shared-prefix requires --engine paged (prefix sharing)")
+        if args.kernel != "xla":
+            ap.error("--kernel pallas requires --engine paged")
 
     cfg = get_config(args.arch, args.variant)
     model = build_model(cfg)
@@ -126,6 +131,7 @@ def main() -> None:
             page_size=args.page_size, num_pages=args.pages,
             prefix_cache=args.prefix_cache,
             prefill_chunks=tuple(args.chunk) if args.chunk else (32,),
+            kernel=args.kernel,
         )
     else:
         engine = ContinuousBatchingEngine(

@@ -8,6 +8,11 @@
 - three execution modes: full-sequence (train / prefill, optionally via the
   Pallas flash kernel), and single-token decode against a KV cache whose
   length dimension is sharded over the ``data`` mesh axis for long-context.
+
+The paged decode/chunked-prefill branches dispatch on ``cfg.decode_kernel``:
+``"xla"`` gathers a contiguous KV view through the page table and reuses
+``_sdpa``; ``"pallas"`` calls kernels/paged_decode, which fuses the table
+gather into the flash inner loop (no materialized view).
 """
 from __future__ import annotations
 
@@ -231,16 +236,27 @@ def apply(
         k_cache = constrain(_paged_write(cache["k"], k, page_table, positions), PAGED_CACHE_AXES["k"])
         v_cache = constrain(_paged_write(cache["v"], v, page_table, positions), PAGED_CACHE_AXES["v"])
         new_cache = {"k": k_cache, "v": v_cache}
-        kg = _paged_gather(k_cache, page_table)
-        vg = _paged_gather(v_cache, page_table)
-        k_pos = jnp.arange(kg.shape[1])[None, :]
-        mask = _mask(
-            jnp.broadcast_to(positions, (b, s)),
-            jnp.broadcast_to(k_pos, (b, kg.shape[1])),
-            causal,
-            sliding_window,
-        )
-        out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
+        if cfg.decode_kernel == "pallas" and causal:
+            from repro.kernels.paged_decode import ops as paged_ops
+
+            # chunk positions are contiguous (lm.prefill_chunk builds them as
+            # pos_start + arange), so the kernel only needs each row's start
+            pos_start = jnp.broadcast_to(positions, (b, s))[:, 0]
+            out = paged_ops.paged_chunk_prefill(
+                q, k_cache, v_cache, page_table, pos_start,
+                sliding_window=sliding_window, softcap=cfg.attn_logit_softcap,
+            )
+        else:
+            kg = _paged_gather(k_cache, page_table)
+            vg = _paged_gather(v_cache, page_table)
+            k_pos = jnp.arange(kg.shape[1])[None, :]
+            mask = _mask(
+                jnp.broadcast_to(positions, (b, s)),
+                jnp.broadcast_to(k_pos, (b, kg.shape[1])),
+                causal,
+                sliding_window,
+            )
+            out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
     elif decode and page_table is not None:
         idx = jnp.asarray(cache_index, jnp.int32)
         if idx.ndim == 0:
@@ -248,15 +264,23 @@ def apply(
         k_cache = constrain(_paged_write(cache["k"], k, page_table, idx[:, None]), PAGED_CACHE_AXES["k"])
         v_cache = constrain(_paged_write(cache["v"], v, page_table, idx[:, None]), PAGED_CACHE_AXES["v"])
         new_cache = {"k": k_cache, "v": v_cache}
-        kg = _paged_gather(k_cache, page_table)
-        vg = _paged_gather(v_cache, page_table)
-        k_pos = jnp.arange(kg.shape[1])[None, :]
-        write_pos = idx[:, None]
-        valid = k_pos <= write_pos
-        if sliding_window is not None:
-            valid = valid & (k_pos > write_pos - sliding_window)
-        mask = jnp.broadcast_to(valid[:, None, :], (b, 1, kg.shape[1]))
-        out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
+        if cfg.decode_kernel == "pallas":
+            from repro.kernels.paged_decode import ops as paged_ops
+
+            out = paged_ops.paged_flash_decode(
+                q[:, 0], k_cache, v_cache, page_table, idx,
+                sliding_window=sliding_window, softcap=cfg.attn_logit_softcap,
+            )[:, None]
+        else:
+            kg = _paged_gather(k_cache, page_table)
+            vg = _paged_gather(v_cache, page_table)
+            k_pos = jnp.arange(kg.shape[1])[None, :]
+            write_pos = idx[:, None]
+            valid = k_pos <= write_pos
+            if sliding_window is not None:
+                valid = valid & (k_pos > write_pos - sliding_window)
+            mask = jnp.broadcast_to(valid[:, None, :], (b, 1, kg.shape[1]))
+            out = _sdpa(q, kg.astype(q.dtype), vg.astype(q.dtype), mask, cfg)
     elif decode:
         # write new kv at cache_index; attend to the full (seq-sharded) cache.
         # cache_index may be a scalar (static batch: all rows at one depth) or

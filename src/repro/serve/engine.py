@@ -330,7 +330,15 @@ class PagedContinuousBatchingEngine:
         num_pages: Optional[int] = None,
         prefix_cache: bool = True,
         prefill_chunks=(32,),
+        kernel: str = "xla",
     ):
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(f"kernel must be 'xla' or 'pallas', got {kernel!r}")
+        if model.cfg.decode_kernel != kernel:
+            # same params, same pytree: only the attention/sampler dispatch
+            # inside the jitted steps changes
+            model = type(model)(model.cfg.replace(decode_kernel=kernel))
+        self.kernel = kernel
         self.model = model
         self.params = params
         self.cache_len = cache_len

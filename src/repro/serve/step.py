@@ -70,8 +70,18 @@ def build_paged_decode_step(model: LanguageModel, width: int, *, donate: bool = 
     exactly what prefill would have produced, and the sampled output is
     discarded until the final prompt token (whose sample is the request's
     first generated token).
+
+    With ``cfg.decode_kernel == "pallas"`` the tick samples through the
+    fused logits→token kernel (kernels/paged_decode), which reproduces
+    :func:`sample_tokens` token-for-token from the same key.
     """
     vocab = model.cfg.vocab_size
+    if model.cfg.decode_kernel == "pallas":
+        from repro.kernels.paged_decode import ops as paged_ops
+
+        sample = paged_ops.fused_sample
+    else:
+        sample = sample_tokens
 
     def step(params, tokens, cache, cache_pos, page_table, active, temperature, top_k, key, memory=None):
         sliced = model.paged_state_slice(cache, width)
@@ -80,7 +90,7 @@ def build_paged_decode_step(model: LanguageModel, width: int, *, donate: bool = 
             params, tokens, sliced, cache_pos, memory=mem, page_table=page_table
         )
         logits = logits[:, -1, :vocab].astype(jnp.float32)
-        nxt = sample_tokens(logits, key, temperature, top_k)
+        nxt = sample(logits, key, temperature, top_k)
         nxt = jnp.where(active, nxt, tokens[:, 0])
         new_cache = model.paged_state_merge(cache, new_sliced, width, active=active)
         return nxt, new_cache

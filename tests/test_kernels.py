@@ -45,6 +45,33 @@ def test_flash_attention_matches_ref(case):
     )
 
 
+def test_flash_attention_sub_block_sequence_clamps():
+    """Grid tail, clamp path: S below the default block size shrinks the
+    block to S (min()), leaving a divisible single-block grid."""
+    ks = jax.random.split(jax.random.key(96), 3)
+    q = jax.random.normal(ks[0], (2, 96, 4, 64))
+    k = jax.random.normal(ks[1], (2, 96, 2, 64))
+    v = jax.random.normal(ks[2], (2, 96, 2, 64))
+    out = flash_attention(q, k, v, causal=True)  # default 128-blocks clamp to 96
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_non_divisible_grid_rejected():
+    """Grid tail, guard path: S above the block size but not a multiple of
+    it must fail the R403 divisibility guard loudly — Pallas would silently
+    read out of bounds otherwise. Explicit smaller blocks make it divisible."""
+    ks = jax.random.split(jax.random.key(192), 3)
+    q = jax.random.normal(ks[0], (1, 192, 2, 64))
+    k = jax.random.normal(ks[1], (1, 192, 2, 64))
+    v = jax.random.normal(ks[2], (1, 192, 2, 64))
+    with pytest.raises(AssertionError):
+        flash_attention(q, k, v, causal=True)  # 192 % 128 != 0
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
 def test_flash_attention_block_shape_independence():
     """Result must not depend on the BlockSpec tile sizes."""
     ks = jax.random.split(jax.random.key(0), 3)
@@ -136,6 +163,32 @@ def test_gla_chunked_matches_ref(case):
     y2, f2 = gla_ref(q, k, v, lw, bonus_u=u, include_current=inc, initial_state=s0)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-5, rtol=5e-4)
     np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=5e-5, rtol=5e-4)
+
+
+def test_gla_sub_chunk_sequence_clamps():
+    """Grid tail, clamp path: S below the chunk size shrinks the chunk to S
+    (min()), leaving a divisible single-chunk grid."""
+    ks = jax.random.split(jax.random.key(96), 4)
+    q = 0.5 * jax.random.normal(ks[0], (1, 96, 2, 16))
+    k = 0.5 * jax.random.normal(ks[1], (1, 96, 2, 16))
+    v = 0.5 * jax.random.normal(ks[2], (1, 96, 2, 16))
+    lw = -2.0 * jnp.abs(jax.random.normal(ks[3], (1, 96, 2, 16)))
+    y1, f1 = gla_chunked(q, k, v, lw, chunk=128)  # clamps 128 -> 96
+    y2, f2 = gla_ref(q, k, v, lw)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=5e-5, rtol=5e-4)
+
+
+def test_gla_non_divisible_grid_rejected():
+    """Grid tail, guard path: S not a multiple of the (clamped) chunk must
+    fail the R403 divisibility guard loudly."""
+    ks = jax.random.split(jax.random.key(100), 4)
+    q = jax.random.normal(ks[0], (1, 100, 1, 8))
+    k = jax.random.normal(ks[1], (1, 100, 1, 8))
+    v = jax.random.normal(ks[2], (1, 100, 1, 8))
+    lw = -jnp.abs(jax.random.normal(ks[3], (1, 100, 1, 8)))
+    with pytest.raises(AssertionError):
+        gla_chunked(q, k, v, lw, chunk=64)  # 100 % 64 != 0
 
 
 @given(
