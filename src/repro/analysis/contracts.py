@@ -73,6 +73,22 @@ COMPILE_BUCKETS: Tuple[CompileBucket, ...] = (
         "one encoder+prefill executable per engine",
     ),
     CompileBucket(
+        "serve.stream.export", "repro/serve/step.py", "build_page_export_step",
+        "one executable per disaggregated engine (fixed (max_pages,) manifest "
+        "shape; prefill worker's cross-submesh gather)",
+    ),
+    CompileBucket(
+        "serve.stream.import", "repro/serve/step.py", "build_page_import_step",
+        "one executable per disaggregated engine (decode worker's adoption "
+        "scatter)",
+    ),
+    CompileBucket(
+        "serve.engine.disagg_workers", "repro/serve/engine.py",
+        "_PrefillWorker.__init__",
+        "two fixed-shape helpers per prefill worker (COW page copy, state-row "
+        "zero), one executable each",
+    ),
+    CompileBucket(
         "serve.engine.paged_helpers", "repro/serve/engine.py",
         "PagedContinuousBatchingEngine.__init__",
         "three fixed-shape helpers per engine (page copy, state-row zero, "

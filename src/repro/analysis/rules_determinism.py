@@ -11,7 +11,14 @@ from __future__ import annotations
 import ast
 from typing import Iterator
 
-from repro.analysis.core import Module, Rule, Violation, dotted_name
+from repro.analysis.core import (
+    Module,
+    Rule,
+    Violation,
+    dotted_name,
+    enclosing_function,
+    function_table,
+)
 
 #: collectives whose reduction order is the backend's choice, not ours
 _ORDERED_COLLECTIVES = {
@@ -200,4 +207,53 @@ class UnsortedFoldOrder(Rule):
                         )
 
 
-RULES = [BackendOrderedCollective(), SetIteration(), AmbientEntropy(), UnsortedFoldOrder()]
+#: the only functions allowed to move serve-side device state across
+#: devices: engine construction (per-worker params/cache placement) and the
+#: disaggregated engine's page-streaming seam
+_PAGE_SEAM_FUNCS = ("DisaggregatedEngine.__init__", "DisaggregatedEngine._stream")
+
+
+class DevicePutBypassesPageSeam(Rule):
+    """R105: device_put in serve/ outside the page export/import seam."""
+
+    id = "R105"
+    title = "device_put in serve/ bypasses the page-streaming seam"
+    hint = (
+        "cross-pool KV transfers must go through export_pages -> "
+        "DisaggregatedEngine._stream -> import_pages so page-id remap and "
+        "both pools' refcount audits see every crossing byte; worker "
+        "params/cache placement belongs in DisaggregatedEngine.__init__. "
+        "Move the transfer behind the seam instead of suppressing."
+    )
+    applies = ("repro/serve/",)
+
+    def check(self, mod: Module) -> Iterator[Violation]:
+        table = function_table(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted_name(node.func, mod.aliases) != "jax.device_put":
+                continue
+            enclosing = enclosing_function(table, node)
+            if enclosing is not None:
+                parts = enclosing[0].split(".")
+                owners = {".".join(parts[: i + 1]) for i in range(len(parts))}
+                if owners & set(_PAGE_SEAM_FUNCS):
+                    continue
+                where = f"in {enclosing[0]}"
+            else:
+                where = "at module level"
+            yield self.violation(
+                mod, node,
+                f"jax.device_put {where} moves serve-side state across "
+                "devices outside the page export/import seam",
+            )
+
+
+RULES = [
+    BackendOrderedCollective(),
+    SetIteration(),
+    AmbientEntropy(),
+    UnsortedFoldOrder(),
+    DevicePutBypassesPageSeam(),
+]

@@ -35,6 +35,43 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: Optional[int] = None):
     return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
 
 
+def make_disagg_submeshes(
+    prefill_pods: int = 1,
+    decode_pods: int = 1,
+    data: int = 1,
+    model: int = 1,
+    devices: Optional[Sequence] = None,
+):
+    """Carve one ``("pod", "data", "model")`` host grid into a disjoint
+    (prefill, decode) submesh pair for disaggregated serving.
+
+    The first ``(prefill_pods + decode_pods) * data * model`` devices are
+    laid out as a pod-major grid and split along the pod axis: pods
+    ``[0, prefill_pods)`` become the prefill submesh, the rest the decode
+    submesh. Explicit device subsets — not two jax.make_mesh calls — so the
+    pair is guaranteed disjoint and deterministic in device order. Each
+    worker of :class:`~repro.serve.engine.DisaggregatedEngine` anchors its
+    params/cache to its submesh's lead device
+    (``mesh.devices.flat[0]``); KV page blocks stream between the two.
+
+    Returns ``(prefill_mesh, decode_mesh)``, both with axes
+    ``("pod", "data", "model")``.
+    """
+    if prefill_pods < 1 or decode_pods < 1:
+        raise ValueError("prefill_pods and decode_pods must each be >= 1")
+    devices = list(jax.devices()) if devices is None else list(devices)
+    need = (prefill_pods + decode_pods) * data * model
+    if len(devices) < need:
+        raise ValueError(
+            f"need {need} devices for a ({prefill_pods}+{decode_pods})x{data}x{model} "
+            f"submesh pair, have {len(devices)} (run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} for host tests)"
+        )
+    grid = np.asarray(devices[:need]).reshape(prefill_pods + decode_pods, data, model)
+    axes = ("pod", "data", "model")
+    return Mesh(grid[:prefill_pods], axes), Mesh(grid[prefill_pods:], axes)
+
+
 def make_data_mesh(width: int, devices: Optional[Sequence] = None) -> Mesh:
     """1-axis ("data",) mesh over the first ``width`` devices.
 

@@ -10,6 +10,11 @@
     # paged KV cache + radix prefix sharing + chunked prefill
     PYTHONPATH=src python -m repro.launch.serve --engine paged \
         --requests 12 --slots 4 --page-size 16 --chunk 32 --prefix-cache
+
+    # disaggregated prefill/decode across two submeshes (8 host devices)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --engine disagg \
+        --requests 12 --slots 4 --prefill-devices 4 --decode-devices 4
 """
 from __future__ import annotations
 
@@ -19,9 +24,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_disagg_submeshes
 from repro.models import build_model
 from repro.serve import (
     ContinuousBatchingEngine,
+    DisaggregatedEngine,
     PagedContinuousBatchingEngine,
     ServeEngine,
 )
@@ -34,7 +41,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--variant", default="smoke")
-    ap.add_argument("--engine", choices=["static", "continuous", "paged"], default="static")
+    ap.add_argument("--engine", choices=["static", "continuous", "paged", "disagg"],
+                    default="static")
     ap.add_argument("--batch", type=int, default=4, help="static: batch size")
     ap.add_argument("--requests", type=int, default=8, help="continuous: request count")
     ap.add_argument("--slots", type=int, default=4, help="continuous: max slot-ring width")
@@ -62,6 +70,15 @@ def main() -> None:
     ap.add_argument("--kernel", choices=["xla", "pallas"], default="xla",
                     help="paged: decode attention/sampler path (pallas = "
                          "kernels/paged_decode; interpret mode off-TPU)")
+    ap.add_argument("--prefill-devices", type=int, default=1,
+                    help="disagg: pods in the prefill submesh")
+    ap.add_argument("--decode-devices", type=int, default=1,
+                    help="disagg: pods in the decode submesh")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="disagg: prefill worker ring width")
+    ap.add_argument("--prefill-pages", type=int, default=None,
+                    help="disagg: prefill pool size in pages (default: "
+                         "prompt-dense-equivalent for the prefill ring)")
     args = ap.parse_args()
 
     for flag, value, low in (
@@ -99,15 +116,34 @@ def main() -> None:
         ap.error(f"--pages must be >= 2 (pool reserves scratch page 0; got {args.pages})")
     if args.engine == "static" and args.b1 is not None:
         ap.error("--b1 requires --engine continuous or paged")
-    if args.engine != "paged":
+    if args.engine not in ("paged", "disagg"):
         if args.pages is not None:
-            ap.error("--pages requires --engine paged")
+            ap.error("--pages requires --engine paged or disagg")
         if args.chunk is not None:
-            ap.error("--chunk requires --engine paged")
+            ap.error("--chunk requires --engine paged or disagg")
         if args.shared_prefix:
-            ap.error("--shared-prefix requires --engine paged (prefix sharing)")
+            ap.error("--shared-prefix requires --engine paged or disagg (prefix sharing)")
         if args.kernel != "xla":
-            ap.error("--kernel pallas requires --engine paged")
+            ap.error("--kernel pallas requires --engine paged or disagg")
+    if args.engine != "disagg":
+        for flag, value, default in (
+            ("--prefill-devices", args.prefill_devices, 1),
+            ("--decode-devices", args.decode_devices, 1),
+            ("--prefill-slots", args.prefill_slots, 2),
+            ("--prefill-pages", args.prefill_pages, None),
+        ):
+            if value != default:
+                ap.error(f"{flag} requires --engine disagg")
+    else:
+        if args.prefill_devices < 1 or args.decode_devices < 1:
+            ap.error("--prefill-devices and --decode-devices must each be >= 1")
+        if args.prefill_slots < 1:
+            ap.error("--prefill-slots must be >= 1")
+        if args.prefill_pages is not None and args.prefill_pages < 2:
+            ap.error(
+                f"--prefill-pages must be >= 2 (pool reserves scratch page 0; "
+                f"got {args.prefill_pages})"
+            )
 
     cfg = get_config(args.arch, args.variant)
     model = build_model(cfg)
@@ -124,7 +160,29 @@ def main() -> None:
                      row[args.prompt_len:].tolist())
         return
 
-    if args.engine == "paged":
+    if args.engine == "disagg":
+        prefill_mesh, decode_mesh = make_disagg_submeshes(
+            prefill_pods=args.prefill_devices, decode_pods=args.decode_devices
+        )
+        engine = DisaggregatedEngine(
+            model, params, cache_len=args.cache_len, max_slots=args.slots,
+            b1=args.b1, rho=args.rho, patience=args.patience,
+            page_size=args.page_size, num_pages=args.pages,
+            prefix_cache=args.prefix_cache,
+            prefill_chunks=tuple(args.chunk) if args.chunk else (32,),
+            kernel=args.kernel,
+            prefill_slots=args.prefill_slots, prefill_pages=args.prefill_pages,
+            prefill_device=prefill_mesh.devices.flat[0],
+            decode_device=decode_mesh.devices.flat[0],
+        )
+        log.info(
+            "disagg submeshes: prefill %s on %s | decode %s on %s",
+            dict(zip(prefill_mesh.axis_names, prefill_mesh.devices.shape)),
+            engine.prefill_device,
+            dict(zip(decode_mesh.axis_names, decode_mesh.devices.shape)),
+            engine.decode_device,
+        )
+    elif args.engine == "paged":
         engine = PagedContinuousBatchingEngine(
             model, params, cache_len=args.cache_len, max_slots=args.slots,
             b1=args.b1, rho=args.rho, patience=args.patience,
@@ -159,7 +217,7 @@ def main() -> None:
         engine.admission.ladder, engine.stats["peak_width"], engine.stats["ticks"],
         engine.stats["decoded_tokens"], engine.decode_compiles,
     )
-    if args.engine == "paged":
+    if args.engine in ("paged", "disagg"):
         mem = engine.memory_stats()
         log.info(
             "pages peak %d/%d | prefix hit-rate %.0f%% | prefill computed %d "
@@ -170,6 +228,14 @@ def main() -> None:
             engine.stats["prefill_tokens_computed"],
             engine.stats["prefix_tokens_reused"], engine.prefill_compiles,
             mem["kv_bytes_peak"] // 1024, mem["kv_bytes_dense_equiv"] // 1024,
+        )
+    if args.engine == "disagg":
+        log.info(
+            "streamed %d transfer(s), %d page(s) | adopted %d page(s) "
+            "decode-side | prefill pool peak %d/%d",
+            engine.stats["transfers"], engine.stats["pages_streamed"],
+            engine.stats["pages_adopted"],
+            mem["prefill_pages_peak"], mem["prefill_pages_capacity"],
         )
 
 

@@ -224,6 +224,34 @@ class LanguageModel:
             return jax.lax.dynamic_update_slice_in_dim(l, row, dst, axis=1)
         return self._map_paged(cache, cp, lambda l: l)
 
+    def paged_export_slot(self, cache, page_ids, slot):
+        """Gather one slot's streamable state (disaggregated serving):
+        attention pages ``page_ids`` ((K,) int32, scratch-0 padded past the
+        prompt) stacked along the page axis, plus the slot's recurrent state
+        row. The result has the cache's tree structure with pool-size-free
+        shapes — ``(layers, K, page_size, ...)`` KV and ``(layers, 1, ...)``
+        state — so it can be device_put to another submesh and scattered
+        into a pool of any size there."""
+        return self._map_paged(
+            cache,
+            lambda l: jnp.take(l, page_ids, axis=1),
+            lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=1),
+        )
+
+    def paged_import_slot(self, cache, block, page_ids, slot):
+        """Scatter a streamed export into this pool's pages and state row.
+        ``page_ids`` lanes mapped to 0 write the scratch page — pad lanes
+        and pages already resident locally (adopted via the prefix index)
+        land there harmlessly, so the scatter shape never depends on how
+        much of the block was deduplicated."""
+        return self._map2_paged(
+            cache, block,
+            lambda f, b: f.at[:, page_ids].set(b.astype(f.dtype)),
+            lambda f, b: jax.lax.dynamic_update_slice_in_dim(
+                f, b.astype(f.dtype), slot, axis=1
+            ),
+        )
+
     def paged_kv_bytes_per_page(self, page_size: int) -> int:
         """Host-side accounting: bytes one page occupies across all
         attention leaves (the unit of the pool's memory high-water mark)."""

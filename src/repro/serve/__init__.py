@@ -7,6 +7,9 @@ Engines (``repro.serve.engine``):
   (b₁ρˢ) admission ramp over a dense cache.
 - :class:`PagedContinuousBatchingEngine` — the same scheduling over a
   **paged** cache with radix prefix sharing and chunked prefill.
+- :class:`DisaggregatedEngine` — the paged engine split into a prefill
+  worker and a decode worker on disjoint submeshes, each with its own
+  page pool; finished prefills stream their KV pages across.
 
 Memory model of the paged engine (``repro.serve.pages``):
 
@@ -27,10 +30,37 @@ Memory model of the paged engine (``repro.serve.pages``):
   inside a page is served copy-on-write. Published pages are never written
   again; the index's own reference keeps them cached after the owning
   request finishes, until LRU eviction under pool pressure.
+
+Two-pool handoff invariants (disaggregated serving, ``export_pages`` /
+``import_pages`` + ``DisaggregatedEngine._stream``):
+
+- **Full pages only.** A transfer carries exactly the prompt's
+  ``ceil(len(prompt)/page_size)`` pages; decode writes begin at position
+  ``len(prompt)``, i.e. in the import plan's ``new_pages``, so adopted
+  (prefix-matched) pages are immutable on the decode side too — adoption
+  is by reference, never copy-on-write.
+- **Physical ids never cross pools.** A :class:`PageExport` names source
+  physical ids; ``import_pages`` allocates destination pages and returns a
+  ``remap`` (source id → destination id) covering only the lanes whose
+  bytes must land. Lanes the destination index already holds — and the
+  padding of the fixed ``(max_pages,)`` manifest — scatter to scratch
+  page 0.
+- **Refcounts are per pool and re-established, not transferred.** The
+  source pool releases a streamed request's pages the moment the export
+  gather has read the (functional, immutable) cache value; the destination
+  pool's counts come entirely from its own ``import_pages`` plan and
+  ``publish_prefix``. ``REPRO_SANITIZE=1`` reconstructs both pools'
+  refcounts exactly, independently, after every mutating transition.
+- **Each worker publishes to its own radix index.** The prefill index
+  deduplicates prompt *compute*; the decode index deduplicates streamed
+  *bytes* (a repeated prefix adopts resident pages instead of re-writing
+  them). Nothing is ever shared by pointer across the seam.
 """
 from repro.serve.step import (
     build_chunk_prefill_step,
     build_decode_step,
+    build_page_export_step,
+    build_page_import_step,
     build_paged_decode_step,
     build_prefill_step,
     build_slot_decode_step,
@@ -38,16 +68,27 @@ from repro.serve.step import (
 )
 from repro.serve.pages import (
     AdmissionPlan,
+    PageExport,
+    PageImport,
     PagePool,
     RadixPrefixIndex,
+    export_pages,
+    import_pages,
     plan_admission,
     publish_prefix,
     release_pages,
 )
-from repro.serve.scheduler import AdmissionController, Request, RequestScheduler
+from repro.serve.scheduler import (
+    AdmissionController,
+    Request,
+    RequestScheduler,
+    Transfer,
+    TransferQueue,
+)
 from repro.serve.slots import PagedSlotManager, SlotManager
 from repro.serve.engine import (
     ContinuousBatchingEngine,
+    DisaggregatedEngine,
     PagedContinuousBatchingEngine,
     ServeEngine,
 )
@@ -56,6 +97,9 @@ __all__ = [
     "AdmissionController",
     "AdmissionPlan",
     "ContinuousBatchingEngine",
+    "DisaggregatedEngine",
+    "PageExport",
+    "PageImport",
     "PagePool",
     "PagedContinuousBatchingEngine",
     "PagedSlotManager",
@@ -64,11 +108,17 @@ __all__ = [
     "RequestScheduler",
     "ServeEngine",
     "SlotManager",
+    "Transfer",
+    "TransferQueue",
     "build_chunk_prefill_step",
     "build_decode_step",
+    "build_page_export_step",
+    "build_page_import_step",
     "build_paged_decode_step",
     "build_prefill_step",
     "build_slot_decode_step",
+    "export_pages",
+    "import_pages",
     "plan_admission",
     "publish_prefix",
     "release_pages",

@@ -17,8 +17,9 @@ Two engines share the model's prefill/decode cache path:
 """
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,15 +30,25 @@ from repro.models.lm import LanguageModel
 from repro.serve.pages import (
     PagePool,
     RadixPrefixIndex,
+    export_pages,
+    import_pages,
     plan_admission,
     publish_prefix,
     release_pages,
 )
-from repro.serve.scheduler import DONE, AdmissionController, RequestScheduler
+from repro.serve.scheduler import (
+    DONE,
+    AdmissionController,
+    RequestScheduler,
+    Transfer,
+    TransferQueue,
+)
 from repro.serve.slots import PagedSlotManager, SlotManager
 from repro.serve.step import (
     build_chunk_prefill_step,
     build_decode_step,
+    build_page_export_step,
+    build_page_import_step,
     build_paged_decode_step,
     build_prefill_step,
     build_slot_decode_step,
@@ -386,6 +397,13 @@ class PagedContinuousBatchingEngine:
             prefix_tokens_reused=0,
             prompt_tokens_total=0,
             cow_copies=0,
+            # wall time per tick from the first prefill-chunk dispatch to the
+            # decode tokens landing on host — the latency a decoding slot
+            # experiences per token, INCLUDING any prompt chunk that the tick
+            # interleaved in front of the decode step (the head-of-line block
+            # disaggregation removes). Only ticks that decoded ≥ 1 real
+            # (non-teacher-forced) token are recorded.
+            decode_tick_s=deque(maxlen=4096),
         )
         return stats
 
@@ -429,17 +447,20 @@ class PagedContinuousBatchingEngine:
         )
 
     # -- compiled-step caches ------------------------------------------------
+    # both steps donate the paged cache: the engine's only reference is
+    # reassigned from each step's return, and without donation every tick
+    # pays a pool-sized memcpy before it computes anything
     def _decode_for(self, width: int):
         if width not in self._decodes:
             self._decodes[width] = build_paged_decode_step(
-                self.model, width, donate=False
+                self.model, width, donate=True
             )
             self.decode_compiles += 1
         return self._decodes[width]
 
     def _chunk_for(self, size: int):
         if size not in self._chunk_steps:
-            self._chunk_steps[size] = build_chunk_prefill_step(self.model, donate=False)
+            self._chunk_steps[size] = build_chunk_prefill_step(self.model, donate=True)
             self.prefill_compiles += 1
         return self._chunk_steps[size]
 
@@ -544,6 +565,13 @@ class PagedContinuousBatchingEngine:
                 admitted += 1
             if slots.num_active() == 0:
                 if admitted == 0 and self.scheduler.has_work():
+                    # the requeued head was replanned with the unshared
+                    # fallback (full index eviction allowed) and still found
+                    # no pages, with no live slot left to release any: the
+                    # request is genuinely larger than the pool. Before the
+                    # fallback existed, a prefix hit whose pinned pages
+                    # wedged eviction raised here spuriously — and a request
+                    # requeued at the final tick was lost with the run.
                     raise RuntimeError(
                         f"page pool ({self.pool.capacity} pages of {self.page_size}) "
                         "cannot fit the next request even after eviction"
@@ -554,6 +582,7 @@ class PagedContinuousBatchingEngine:
             # 3. one prefill chunk (round-robin over prefilling slots, so a
             #    long prompt neither stalls decode nor starves other
             #    prefills of their chunk turn)
+            t_tick = time.perf_counter()
             prefilling = slots.prefilling_indices()
             self._chunk_rr += 1
             for i in prefilling[self._chunk_rr % max(len(prefilling), 1):] + \
@@ -585,6 +614,7 @@ class PagedContinuousBatchingEngine:
                 self.stats["prefill_tokens_computed"] += bucket
                 if slot.prompt_remaining == 0:
                     slots.start_decoding(i, self._sample_first(req, logits))
+                    self.scheduler.prefill_done(req)
                     self._maybe_publish(slots, i)
                     if len(req.generated) >= req.max_new_tokens:
                         self._finish(slots, i, completed)
@@ -616,15 +646,22 @@ class PagedContinuousBatchingEngine:
             self.stats["decoded_tokens"] += int(active.sum()) - n_forced
             self.stats["prefill_tokens_computed"] += n_forced
             self.stats["stage_history"].append(self.admission.stage)
+            nxt = np.asarray(nxt)  # block: the tick's tokens reach the host
+            if int(active.sum()) - n_forced > 0:
+                self.stats["decode_tick_s"].append(time.perf_counter() - t_tick)
 
-            # 5. bookkeeping: newly-decoding slots publish their prefix,
-            #    finished requests release their pages
-            for i in slots.advance(np.asarray(nxt)):
+            # 5. bookkeeping: newly-decoding slots timestamp their handoff
+            #    and publish their prefix, finished requests release pages
+            for i in slots.advance(nxt):
                 self._maybe_publish(slots, i)
                 self._finish(slots, i, completed)
             for i in range(width):
-                if not slots.slots[i].free:
-                    self._maybe_publish(slots, i)
+                slot = slots.slots[i]
+                if slot.free:
+                    continue
+                if slot.decoding and slot.request.t_prefill_done == 0.0:
+                    self.scheduler.prefill_done(slot.request)
+                self._maybe_publish(slots, i)
 
         if sanitize.enabled():
             sanitize.audit_engine_compiles(self, where="(run end)")
@@ -649,6 +686,689 @@ class PagedContinuousBatchingEngine:
             "pages_capacity": self.pool.capacity,
             "pages_peak": self.pool.peak_used,
             "kv_bytes_peak": self.pool.peak_used * per_page,
+            "kv_bytes_dense_equiv": dense_rows * self.max_pages * per_page,
+            "prefix_hit_rate": (
+                self.stats["prefix_tokens_reused"]
+                / max(self.stats["prompt_tokens_total"], 1)
+            ),
+        }
+
+
+class _DisaggWorker:
+    """Shared shape of the two disaggregated workers: a private page pool
+    (+ optional radix index), params and a paged cache committed to the
+    worker's submesh lead device, and the executable caches the sanitizer
+    audits. ``audit_engine_compiles`` duck-types against these attributes;
+    ``admission`` bounds the worker's tick widths — the engine's SEBS
+    controller for the decode worker, a single-rung ladder at the fixed
+    ring width for the prefill worker's tail tick."""
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        device,
+        admission: AdmissionController,
+        num_pages: int,
+        page_size: int,
+        prefix_cache: bool,
+    ):
+        self.model = model
+        self.params = params
+        self.device = device
+        self.admission = admission
+        self.pool = PagePool(num_pages, page_size)
+        self.index = RadixPrefixIndex(self.pool) if prefix_cache else None
+        self.cache = None  # committed by DisaggregatedEngine.__init__
+        self._decodes: Dict[int, Any] = {}
+        self._chunk_steps: Dict[int, Any] = {}
+        self.prefill_chunks: Tuple[int, ...] = ()
+        self.decode_compiles = 0
+        self.prefill_compiles = 0
+
+    def audit_pages(self, slots: PagedSlotManager, where: str) -> None:
+        """REPRO_SANITIZE=1 hook: exact refcount reconstruction for THIS
+        worker's pool after every pool-mutating transition."""
+        if sanitize.enabled():
+            plans = [s.plan for s in slots.slots if not s.free]
+            sanitize.audit_page_pool(self.pool, self.index, plans, where=where)
+
+
+class _PrefillWorker(_DisaggWorker):
+    """Prefill half: chunked prefill at its own ring width and chunk shape,
+    plus the COW-copy / state-zero / page-export helpers. Prompt tails
+    shorter than the smallest chunk bucket ride the worker's own
+    teacher-forced tick — the same ``build_paged_decode_step`` executable
+    family as the single-mesh tail path (the chunked-attention branch
+    requires ≥ 2 tokens), compiled once at the fixed prefill ring width.
+    The worker's ladder is the single rung ``[ring]``, so the compile audit
+    bounds it to exactly that one tick variant."""
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        device,
+        ring: int,
+        num_pages: int,
+        page_size: int,
+        prefix_cache: bool,
+        prefill_chunks,
+    ):
+        super().__init__(
+            model,
+            params,
+            device,
+            AdmissionController(b1=ring, max_slots=ring),
+            num_pages,
+            page_size,
+            prefix_cache,
+        )
+        self.ring = ring
+        self.prefill_chunks = tuple(sorted(set(int(c) for c in prefill_chunks)))
+        assert self.prefill_chunks and min(self.prefill_chunks) >= 1
+        self._copy_page = jax.jit(model.paged_copy_page)
+        self._zero_state = jax.jit(model.paged_zero_state_row)
+        self._export = build_page_export_step(model)
+
+    # chunk + tail steps donate the prefill cache (only reference is
+    # reassigned per step); the export gather reads the *current* cache
+    # value and never an old donated buffer
+    def chunk_for(self, size: int):
+        if size not in self._chunk_steps:
+            self._chunk_steps[size] = build_chunk_prefill_step(self.model, donate=True)
+            self.prefill_compiles += 1
+        return self._chunk_steps[size]
+
+    def tick(self):
+        """The tail tick, compiled at the prefill ring width."""
+        if self.ring not in self._decodes:
+            self._decodes[self.ring] = build_paged_decode_step(
+                self.model, self.ring, donate=True
+            )
+            self.decode_compiles += 1
+        return self._decodes[self.ring]
+
+
+class _DecodeWorker(_DisaggWorker):
+    """Decode half: pure fixed-shape decode ticks behind the SEBS admission
+    ladder, plus the page-import scatter that adopts streamed prefills.
+    ``prefill_chunks`` stays ``()`` and ``_chunk_steps`` stays ``{}`` by
+    construction — the REPRO_SANITIZE compile audit *enforces* that this
+    worker never compiles a chunk-prefill variant."""
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        device,
+        admission: AdmissionController,
+        num_pages: int,
+        page_size: int,
+        prefix_cache: bool,
+    ):
+        super().__init__(
+            model, params, device, admission, num_pages, page_size, prefix_cache
+        )
+        # the adoption scatter donates the decode cache: the worker's only
+        # reference is reassigned from the step's return, and without
+        # donation every adoption copies the full decode pool, queueing a
+        # pool-sized memcpy in front of the next decode tick
+        self._import = build_page_import_step(model, donate=True)
+
+    def decode_for(self, width: int):
+        if width not in self._decodes:
+            self._decodes[width] = build_paged_decode_step(
+                self.model, width, donate=True
+            )
+            self.decode_compiles += 1
+        return self._decodes[width]
+
+
+class DisaggregatedEngine:
+    """Disaggregated prefill/decode serving across two submeshes.
+
+    Splits :class:`PagedContinuousBatchingEngine` into two workers on
+    disjoint device groups (:func:`~repro.launch.mesh.make_disagg_submeshes`
+    carves them from one ``("pod", "data", "model")`` host mesh; each worker
+    anchors to its submesh's lead device):
+
+    - the **prefill worker** runs chunked prefill at its own ring width
+      (``prefill_slots``) and chunk shape against a private
+      :class:`~repro.serve.pages.PagePool` — long prompts no longer share a
+      tick with decode, so they can use large chunk buckets without
+      stretching any running request's inter-token latency;
+    - the **decode worker** runs pure fixed-shape decode ticks behind the
+      SEBS admission ladder against its own pool; it compiles *no*
+      chunk-prefill variants (one executable per ladder stage, period).
+
+    A finished prefill streams to the decode submesh as a
+    :class:`~repro.serve.scheduler.Transfer`: the prompt's full KV pages
+    plus the recurrent-state row are gathered into a pool-size-free block
+    (``step.build_page_export_step``), ``device_put`` toward the decode
+    device — the engine's ONE cross-submesh transfer, pinned to
+    :meth:`_stream` by lint rule R105 — and adopted into the decode pool by
+    :func:`~repro.serve.pages.import_pages`: page ids remapped, refcounts
+    re-established in the destination pool, and the prompt's full pages
+    re-published to the decode-side radix index. The prefix index therefore
+    spans the seam *at page granularity*: a transfer whose full-page prefix
+    is already resident decode-side adopts those pages by reference (its
+    streamed lanes scatter to the scratch page), and the prefill worker's
+    own index skips recomputing shared prefixes exactly as the single-mesh
+    engine does.
+
+    Greedy output is bit-identical to the single-mesh paged engine given
+    the same ``prefill_chunks`` (``tests/test_disagg_serve.py`` property-
+    tests this, including deferred admission under pool pressure and
+    cross-pool prefix adoption): chunk-path KV equals decode-path KV per
+    token, sub-chunk prompt tails use the same teacher-forced tick builder
+    as the single-mesh engine (at the prefill ring width — rows of the tick
+    are independent), streamed pages are bit-exact copies, and greedy
+    sampling is argmax, indifferent to the engines' different RNG-stream
+    consumption. Encoder-decoder models are not supported (per-request
+    encoder memory is dense per-slot state and does not page-stream);
+    recurrent-state families are — the state row rides the block.
+
+    With a single visible device both workers share it (degraded mode:
+    still two pools, two caches, and a real ``device_put`` seam), so every
+    identity property holds under plain CPU tests.
+    """
+
+    def __init__(
+        self,
+        model: LanguageModel,
+        params,
+        cache_len: int = 256,
+        max_slots: int = 8,
+        b1: Optional[int] = None,
+        rho: float = 2.0,
+        patience: int = 2,
+        admission: Optional[AdmissionController] = None,
+        seed: int = 0,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        prefix_cache: bool = True,
+        prefill_chunks=(32,),
+        kernel: str = "xla",
+        prefill_slots: int = 2,
+        prefill_pages: Optional[int] = None,
+        prefill_device=None,
+        decode_device=None,
+    ):
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(f"kernel must be 'xla' or 'pallas', got {kernel!r}")
+        if model.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "disaggregated serving does not support encoder-decoder models: "
+                "per-request encoder memory is dense per-slot state and does "
+                "not page-stream"
+            )
+        if model.cfg.decode_kernel != kernel:
+            model = type(model)(model.cfg.replace(decode_kernel=kernel))
+        self.kernel = kernel
+        self.model = model
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.max_pages = -(-cache_len // page_size)
+        self.max_slots = max_slots
+        self.prefill_slots = int(prefill_slots)
+        assert self.prefill_slots >= 1
+        devices = jax.devices()
+        if prefill_device is None:
+            prefill_device = devices[0]
+        if decode_device is None:
+            decode_device = devices[1] if len(devices) > 1 else devices[0]
+        self.prefill_device = prefill_device
+        self.decode_device = decode_device
+        self.prefix_sharing = bool(prefix_cache) and (
+            PagedContinuousBatchingEngine._sharing_supported(model)
+        )
+        self.admission = admission or AdmissionController(
+            b1=b1 if b1 is not None else max_slots,
+            rho=rho,
+            max_slots=max_slots,
+            patience=patience,
+        )
+        self.scheduler = RequestScheduler()
+        self.transfers = TransferQueue()
+        # independent pools: decode sized like the single-mesh engine,
+        # prefill sized to its own (smaller) ring — prompts only
+        self.num_pages = (
+            num_pages if num_pages is not None else 1 + max_slots * self.max_pages
+        )
+        self.prefill_pages = (
+            prefill_pages
+            if prefill_pages is not None
+            else 1 + self.prefill_slots * self.max_pages
+        )
+        # ALL cross-device placement happens here and in _stream (rule R105
+        # pins device_put in serve/ to exactly those two sites): params are
+        # replicated per worker, each cache is committed to its worker's
+        # device, so every executable dispatches on its own submesh and the
+        # only bytes crossing at runtime are streamed page blocks
+        self.prefill = _PrefillWorker(
+            model,
+            jax.device_put(params, prefill_device),
+            prefill_device,
+            self.prefill_slots,
+            self.prefill_pages,
+            page_size,
+            self.prefix_sharing,
+            prefill_chunks,
+        )
+        self.decode = _DecodeWorker(
+            model,
+            jax.device_put(params, decode_device),
+            decode_device,
+            self.admission,
+            self.num_pages,
+            page_size,
+            self.prefix_sharing,
+        )
+        self.prefill.cache = jax.device_put(
+            model.init_paged_cache(self.prefill_pages, page_size, self.prefill_slots),
+            prefill_device,
+        )
+        self.decode.cache = jax.device_put(
+            model.init_paged_cache(self.num_pages, page_size, max_slots),
+            decode_device,
+        )
+        self._rng = jax.random.key(seed)
+        self._chunk_rr = 0
+        self.stats: Dict[str, Any] = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, Any]:
+        stats = PagedContinuousBatchingEngine._fresh_stats()
+        stats.update(transfers=0, pages_streamed=0, pages_adopted=0)
+        return stats
+
+    def reset_stats(self) -> None:
+        """Zero every counter and rebase BOTH pools' high-water marks (see
+        :meth:`PagedContinuousBatchingEngine.reset_stats`)."""
+        self.stats.clear()
+        self.stats.update(self._fresh_stats())
+        self.prefill.pool.peak_used = self.prefill.pool.used
+        self.decode.pool.peak_used = self.decode.pool.used
+
+    # compiled-variant counters, shaped like the single-mesh engine's for
+    # launcher/benchmark logging: decode variants only ever live on the
+    # decode worker, chunk variants only on the prefill worker
+    @property
+    def decode_compiles(self) -> int:
+        return self.decode.decode_compiles
+
+    @property
+    def prefill_compiles(self) -> int:
+        return self.prefill.prefill_compiles
+
+    # -- request intake ------------------------------------------------------
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        top_k: int = 0,
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size + max_new_tokens <= self.cache_len, "cache_len too small"
+        return self.scheduler.submit(
+            prompt, max_new_tokens, temperature=temperature, top_k=top_k
+        )
+
+    # -- the streaming seam --------------------------------------------------
+    def _stream(self, block):
+        """The one runtime cross-submesh transfer: commit an exported page
+        block toward the decode device. jax transfers are async — the copy
+        overlaps subsequent prefill chunks and decode ticks; the decode-side
+        import scatter synchronizes on arrival."""
+        return jax.device_put(block, self.decode_device)
+
+    def _sample_first(self, req, logits):
+        self._rng, sub = jax.random.split(self._rng)
+        first = sample_tokens(
+            logits[:, -1, : self.model.cfg.vocab_size].astype(jnp.float32),
+            sub,
+            jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+        )
+        return int(first[0])
+
+    # -- prefill side --------------------------------------------------------
+    def _admit_prefill(self, pslots: PagedSlotManager, i: int, req, plan):
+        if plan.cow_src is not None:
+            self.prefill.cache = self.prefill._copy_page(
+                self.prefill.cache, jnp.int32(plan.cow_src), jnp.int32(plan.new_pages[0])
+            )
+            self.stats["cow_copies"] += 1
+        self.prefill.cache = self.prefill._zero_state(self.prefill.cache, jnp.int32(i))
+        pslots.admit(i, req, plan)
+        self.stats["prefix_tokens_reused"] += plan.reuse_len
+        self.stats["prompt_tokens_total"] += len(req.prompt)
+        self.prefill.audit_pages(pslots, where=f"after prefill admit(slot {i})")
+
+    def _chunk_tick(self, pslots: PagedSlotManager, completed) -> None:
+        """One chunk per prefilling slot per engine tick (round-robin start,
+        so no slot starves inside the ring). Each slot takes the largest
+        declared bucket that fits its remaining prompt; a sub-chunk tail is
+        left for :meth:`_tail_tick`. A prompt that completes exactly on a
+        chunk is sampled from the chunk's logits and handed off before the
+        next slot's chunk runs."""
+        prefilling = pslots.prefilling_indices()
+        if not prefilling:
+            return
+        self._chunk_rr += 1
+        off = self._chunk_rr % len(prefilling)
+        for i in prefilling[off:] + prefilling[:off]:
+            slot = pslots.slots[i]
+            rem = slot.prompt_remaining
+            bucket = max(
+                (c for c in self.prefill.prefill_chunks if c <= rem), default=None
+            )
+            if bucket is None:
+                continue  # sub-chunk tail: teacher-forced by _tail_tick
+            step = self.prefill.chunk_for(bucket)
+            req = slot.request
+            toks = jnp.asarray(req.prompt[slot.fill : slot.fill + bucket][None, :])
+            logits, self.prefill.cache = step(
+                self.prefill.params,
+                toks,
+                self.prefill.cache,
+                jnp.int32(slot.fill),
+                jnp.int32(i),
+                jnp.asarray(pslots.page_table[i : i + 1]),
+            )
+            slot.fill += bucket
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens_computed"] += bucket
+            if slot.prompt_remaining == 0:
+                self._handoff(pslots, i, self._sample_first(req, logits), completed)
+
+    def _tail_tick(self, pslots: PagedSlotManager, completed) -> None:
+        """One teacher-forced tick over the prefill ring for prompt tails
+        shorter than the smallest chunk bucket — the exact single-mesh tail
+        path (the chunked-attention branch needs ≥ 2 tokens), at the fixed
+        prefill ring width. A lane consuming its LAST prompt token keeps the
+        tick's sample as the request's first generated token and is handed
+        off; every prefill-side sample before that is discarded."""
+        active = pslots.active_mask()
+        if not active.any():
+            return
+        step = self.prefill.tick()
+        self._rng, sub = jax.random.split(self._rng)
+        n_forced = int(active.sum())
+        nxt, self.prefill.cache = step(
+            self.prefill.params,
+            jnp.asarray(pslots.feed_tokens()[:, None]),
+            self.prefill.cache,
+            jnp.asarray(pslots.positions()),
+            jnp.asarray(pslots.page_table),
+            jnp.asarray(active),
+            jnp.asarray(pslots.temperatures()),
+            jnp.asarray(pslots.top_ks()),
+            sub,
+        )
+        self.stats["prefill_tokens_computed"] += n_forced
+        for i in pslots.advance(np.asarray(nxt)):
+            # prompt done AND max_new_tokens == 1: finished without ever
+            # touching the seam (advance appended the first token already)
+            slot = pslots.slots[i]
+            req = slot.request
+            if self.prefill.index is not None:
+                publish_prefix(self.prefill.index, req.prompt, slot.plan.pages)
+            release_pages(self.prefill.pool, slot.plan.pages)
+            self.scheduler.prefill_done(req)
+            self.scheduler.finish(req)
+            completed[req.id] = req.tokens()
+            pslots.release(i)
+            self.prefill.audit_pages(pslots, where=f"after prefill finish(slot {i})")
+        for i, slot in enumerate(pslots.slots):
+            if slot.free or not slot.decoding:
+                continue
+            # newly decoding = prompt completed this tick: reclaim the first
+            # token advance() appended (the decode worker re-appends it at
+            # adoption) and hand the slot off
+            first = slot.request.generated.pop()
+            self._handoff(pslots, i, first, completed)
+
+    def _handoff(self, pslots: PagedSlotManager, i: int, first: int, completed):
+        """Prompt fully computed and ``first`` sampled (not yet appended):
+        publish the prefix prefill-side, then stream the slot's pages to the
+        decode worker — or, for single-token requests, complete right here
+        without touching the seam."""
+        slot = pslots.slots[i]
+        req = slot.request
+        if self.prefill.index is not None:
+            publish_prefix(self.prefill.index, req.prompt, slot.plan.pages)
+        if req.max_new_tokens <= 1:
+            req.generated.append(int(first))
+            release_pages(self.prefill.pool, slot.plan.pages)
+            self.scheduler.prefill_done(req)
+            self.scheduler.finish(req)
+            completed[req.id] = req.tokens()
+            pslots.release(i)
+            self.prefill.audit_pages(pslots, where=f"after prefill finish(slot {i})")
+            return
+        export = export_pages(
+            slot.plan, req.prompt, page_size=self.page_size, first_token=first
+        )
+        ids = np.zeros((self.max_pages,), np.int32)
+        ids[: len(export.pages)] = export.pages
+        block = self.prefill._export(self.prefill.cache, jnp.asarray(ids), jnp.int32(i))
+        self.transfers.push(Transfer(export=export, block=self._stream(block), request=req))
+        self.scheduler.prefill_done(req)
+        self.stats["transfers"] += 1
+        self.stats["pages_streamed"] += len(export.pages)
+        # prefill pages release immediately: the export gather above read the
+        # functional cache *value*, so reallocating these physical pages to
+        # the next admission cannot race the in-flight stream; published
+        # pages live on under the prefill index for future prefix hits
+        release_pages(self.prefill.pool, slot.plan.pages)
+        pslots.release(i)
+        self.prefill.audit_pages(pslots, where=f"after export(slot {i})")
+
+    # -- decode side ---------------------------------------------------------
+    def _adopt(self, dslots: PagedSlotManager, i: int, transfer, imp) -> None:
+        """Adopt a streamed prefill into decode slot ``i``: scatter the block
+        into the decode pool at the remapped physical ids (lanes the local
+        prefix index already holds — and padding — route to scratch page 0),
+        install the state row, and re-publish the prompt's full pages to the
+        decode-side index so later transfers with the same prefix adopt by
+        reference instead of re-writing bytes."""
+        req = transfer.request
+        export = transfer.export
+        ids = np.zeros((self.max_pages,), np.int32)
+        for j, src in enumerate(export.pages):
+            if src in imp.remap:
+                ids[j] = imp.remap[src]
+        self.decode.cache = self.decode._import(
+            self.decode.cache, transfer.block, jnp.asarray(ids), jnp.int32(i)
+        )
+        dslots.admit(i, req, imp.plan)
+        slot = dslots.slots[i]
+        slot.fill = len(req.prompt)  # nothing left to prefill: KV arrived by stream
+        dslots.start_decoding(i, export.first_token)
+        if self.decode.index is not None:
+            publish_prefix(self.decode.index, req.prompt, imp.plan.pages)
+            slot.published = True
+        self.stats["pages_adopted"] += imp.adopted
+        self.decode.audit_pages(dslots, where=f"after adopt(slot {i})")
+
+    def _finish_decode(self, dslots: PagedSlotManager, i: int, completed) -> None:
+        slot = dslots.slots[i]
+        req = slot.request
+        release_pages(self.decode.pool, slot.plan.pages)
+        self.scheduler.finish(req)
+        completed[req.id] = req.tokens()
+        dslots.release(i)
+        self.decode.audit_pages(dslots, where=f"after decode release(slot {i})")
+
+    # -- the serve loop ------------------------------------------------------
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive both workers until every submitted request is done. Each
+        engine tick: ramp the decode ladder, admit prompts into the prefill
+        ring, adopt queued transfers into freed decode slots, run one
+        fixed-shape decode tick TO COMPLETION (tokens fetched to host), and
+        only then run one chunk per prefilling slot (completions stream
+        across, adopted next tick) — so a decode token never waits behind a
+        prompt chunk. Returns results completed during THIS call."""
+        completed: Dict[int, np.ndarray] = {}
+        width = self.admission.budget()
+        dslots = PagedSlotManager(width, self.max_pages)
+        pslots = PagedSlotManager(
+            self.prefill_slots,
+            self.max_pages,
+            chunk_floor=min(self.prefill.prefill_chunks),
+        )
+
+        while self.scheduler.has_work():
+            # 1. decode-side stagewise ramp (host arrays only)
+            budget = self.admission.observe(self.scheduler.demand)
+            if budget > width:
+                dslots.grow(budget)
+                width = budget
+            self.stats["peak_width"] = max(self.stats["peak_width"], width)
+
+            # 2. prefill admission: FIFO into the prefill ring, decoupled
+            #    from the decode ladder — a burst of long prompts saturates
+            #    prefill without waiting for (or widening) decode slots
+            prefill_admitted = 0
+            for i in pslots.free_indices():
+                req = self.scheduler.pop_waiting()
+                if req is None:
+                    break
+                plan = plan_admission(
+                    self.prefill.pool,
+                    self.prefill.index,
+                    req.prompt,
+                    len(req.prompt),  # prefill holds prompt pages only
+                    share=self.prefix_sharing,
+                )
+                if plan is None:
+                    self.scheduler.requeue(req)
+                    break
+                self._admit_prefill(pslots, i, req, plan)
+                prefill_admitted += 1
+            # the queue head found no prefill pages with the ring empty:
+            # no prefill-side release is pending and the unshared-replan
+            # fallback already evicted the whole index, so no future tick
+            # can do better (decode releases go to the OTHER pool)
+            if (
+                prefill_admitted == 0
+                and pslots.num_active() == 0
+                and self.scheduler.num_waiting > 0
+            ):
+                raise RuntimeError(
+                    f"prefill page pool ({self.prefill.pool.capacity} pages of "
+                    f"{self.page_size}) cannot fit the next request even "
+                    "after eviction"
+                )
+
+            # 3. decode admission: adopt blocks streamed by PREVIOUS ticks,
+            #    strictly FIFO — a transfer the pool cannot place yet blocks
+            #    the queue head and retries next tick, after decode releases
+            #    free pages
+            decode_admitted = 0
+            for i in dslots.free_indices():
+                transfer = self.transfers.peek()
+                if transfer is None:
+                    break
+                req = transfer.request
+                imp = import_pages(
+                    self.decode.pool,
+                    self.decode.index,
+                    transfer.export,
+                    len(req.prompt) + req.max_new_tokens,
+                    share=self.prefix_sharing,
+                )
+                if imp is None:
+                    break
+                self.transfers.pop()
+                self._adopt(dslots, i, transfer, imp)
+                decode_admitted += 1
+            # the head transfer found no decode pages with the decode ring
+            # empty: no decode-side release is pending and import_pages
+            # already fell back to unshared planning (full index eviction) —
+            # the request's total footprint exceeds the decode pool, forever
+            if (
+                decode_admitted == 0
+                and dslots.num_active() == 0
+                and len(self.transfers) > 0
+            ):
+                raise RuntimeError(
+                    f"decode page pool ({self.decode.pool.capacity} pages of "
+                    f"{self.page_size}) cannot fit the next streamed transfer "
+                    "even after eviction"
+                )
+
+            # 4. one pure decode tick, run to completion BEFORE any prefill
+            #    work: the decode ring never holds a prefilling slot, so no
+            #    lane is teacher-forced — and because the tick's tokens are
+            #    fetched before a single prompt chunk is dispatched, a
+            #    decode token never waits on concurrent prefill. That is the
+            #    head-of-line block the single-mesh engine suffers (its tick
+            #    runs chunk-then-decode on one device), measured by
+            #    ``stats["decode_tick_s"]`` in both engines.
+            active = dslots.active_mask()
+            if active.any():
+                t_tick = time.perf_counter()
+                step = self.decode.decode_for(width)
+                self._rng, sub = jax.random.split(self._rng)
+                nxt, self.decode.cache = step(
+                    self.decode.params,
+                    jnp.asarray(dslots.feed_tokens()[:, None]),
+                    self.decode.cache,
+                    jnp.asarray(dslots.positions()),
+                    jnp.asarray(dslots.page_table),
+                    jnp.asarray(active),
+                    jnp.asarray(dslots.temperatures()),
+                    jnp.asarray(dslots.top_ks()),
+                    sub,
+                )
+                self.stats["ticks"] += 1
+                self.stats["decoded_tokens"] += int(active.sum())
+                self.stats["stage_history"].append(self.admission.stage)
+                nxt = np.asarray(nxt)  # block: tokens on host, pre-prefill
+                self.stats["decode_tick_s"].append(time.perf_counter() - t_tick)
+                # 5. finished requests release their decode-pool pages
+                for i in dslots.advance(nxt):
+                    self._finish_decode(dslots, i, completed)
+
+            # 6. chunk steps, then one teacher-forced tick for sub-chunk
+            #    prompt tails; completions export + stream (adopted at the
+            #    next tick's step 3, behind the decode tokens already out)
+            self._chunk_tick(pslots, completed)
+            self._tail_tick(pslots, completed)
+
+        if sanitize.enabled():
+            sanitize.audit_engine_compiles(self.prefill, where="(run end, prefill)")
+            sanitize.audit_engine_compiles(self.decode, where="(run end, decode)")
+        return completed
+
+    # -- reporting -----------------------------------------------------------
+    def latencies(self) -> Dict[int, float]:
+        return {
+            rid: req.latency
+            for rid, req in self.scheduler.requests.items()
+            if req.state == DONE
+        }
+
+    def memory_stats(self) -> Dict[str, Any]:
+        """Two-pool KV accounting: peaks are per worker (they live on
+        different submeshes — summing them would compare apples to a dense
+        single-device slab), dense-equivalent and hit rate follow the
+        single-mesh definitions."""
+        per_page = self.model.paged_kv_bytes_per_page(self.page_size)
+        dense_rows = max(self.stats["peak_width"], 1)
+        return {
+            "page_size": self.page_size,
+            "pages_capacity": self.decode.pool.capacity,
+            "pages_peak": self.decode.pool.peak_used,
+            "prefill_pages_capacity": self.prefill.pool.capacity,
+            "prefill_pages_peak": self.prefill.pool.peak_used,
+            "kv_bytes_peak": (
+                max(self.prefill.pool.peak_used, self.decode.pool.peak_used) * per_page
+            ),
             "kv_bytes_dense_equiv": dense_rows * self.max_pages * per_page,
             "prefix_hit_rate": (
                 self.stats["prefix_tokens_reused"]

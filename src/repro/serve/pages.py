@@ -261,7 +261,29 @@ def plan_admission(
 
     Reuse is capped at ``len(prompt) - 1``: the last prompt token is always
     recomputed so its logits exist to sample the first output token.
+
+    A shared plan pins its matched pages before evicting, and a pinned page
+    (refcount 2: index + pin) is unevictable — so on a small pool the very
+    prefix hit that should save work can instead wedge admission: nothing
+    else holds pages, yet the plan cannot free any. When that happens the
+    planner retries **unshared**, which pins nothing and may evict the whole
+    index; admission now fails only if the pool genuinely cannot hold
+    ``ceil(total_len / page_size)`` pages after full eviction.
     """
+    plan = _plan_once(pool, index, prompt, total_len, share=share)
+    if plan is None and share and index is not None:
+        plan = _plan_once(pool, index, prompt, total_len, share=False)
+    return plan
+
+
+def _plan_once(
+    pool: PagePool,
+    index: Optional[RadixPrefixIndex],
+    prompt,
+    total_len: int,
+    *,
+    share: bool,
+) -> Optional[AdmissionPlan]:
     ps = pool.page_size
     n_logical = -(-total_len // ps)  # ceil
     prompt = [int(t) for t in prompt]
@@ -321,3 +343,126 @@ def release_pages(pool: PagePool, pages: List[int]) -> None:
     alive under the index's reference; private pages return to the pool."""
     for pid in pages:
         pool.release(pid)
+
+
+# ---------------------------------------------------------------------------
+# cross-pool page streaming (disaggregated serving)
+# ---------------------------------------------------------------------------
+# The disaggregated engine runs prefill and decode against *separate* pools
+# (one per submesh). A finished prefill is handed over as a PageExport — the
+# host manifest travelling with the device-side gathered page block — and
+# adopted into the decode pool through import_pages, which re-establishes
+# refcounts locally and returns the src→dst physical-id remap the scatter
+# needs. Page ids are pool-local and never cross the seam unremapped.
+
+
+@dataclass
+class PageExport:
+    """Host manifest of one finished prefill, the streaming unit.
+
+    ``pages`` are the *source-pool* physical ids of the prompt's logical
+    pages, in logical order — meaningless in any other pool until
+    :func:`import_pages` remaps them. ``first_token`` is the request's first
+    generated token, sampled from the final prompt logits on the prefill
+    side, so the decode side never needs prefill logits."""
+
+    prompt: List[int]
+    pages: List[int]
+    page_size: int
+    first_token: int
+
+
+def export_pages(plan: AdmissionPlan, prompt, *, page_size: int,
+                 first_token: int) -> PageExport:
+    """Snapshot a finished prefill's prompt pages for streaming. Host-only:
+    takes no references — the exporting engine keeps its plan live until the
+    device block has been gathered (the gather is enqueued before any later
+    write to these pages, so releasing right after is safe)."""
+    prompt = [int(t) for t in prompt]
+    n_prompt = -(-len(prompt) // page_size)
+    assert len(plan.pages) >= n_prompt
+    return PageExport(
+        prompt=prompt,
+        pages=list(plan.pages[:n_prompt]),
+        page_size=page_size,
+        first_token=int(first_token),
+    )
+
+
+@dataclass
+class PageImport:
+    """Destination-pool placement for one :class:`PageExport`.
+
+    ``plan.pages`` hold the request's logical pages in the *destination*
+    pool (adopted prefix pages first, then freshly allocated ones);
+    ``remap`` maps each streamed source id to its destination id — source
+    pages whose content is already resident (adopted via the destination's
+    radix index) are absent from it, and the scatter routes their lanes to
+    the scratch page."""
+
+    plan: AdmissionPlan
+    remap: Dict[int, int]
+    adopted: int  # full prompt pages deduped against the destination index
+
+
+def import_pages(
+    pool: PagePool,
+    index: Optional[RadixPrefixIndex],
+    export: PageExport,
+    total_len: int,
+    *,
+    share: bool = True,
+) -> Optional[PageImport]:
+    """Adopt a streamed prefill into this pool: match the prompt's *full*
+    pages against the local radix index (a hit means identical KV is already
+    resident — those pages are retained, not re-streamed), allocate
+    destination pages for everything else (LRU-evicting on pressure), and
+    return the placement. None — nothing retained/allocated — if the pool
+    cannot cover ``total_len`` positions.
+
+    Unlike :func:`plan_admission` there is no ``len(prompt) - 1`` reuse cap
+    (the first token is already sampled; no logits are recomputed) and no
+    copy-on-write (partial-page divergence is served by the streamed bytes
+    themselves). The same pin-then-evict order applies, with the same
+    unshared retry when pinned adoptions wedge eviction."""
+    ps = export.page_size
+    assert pool.page_size == ps, (pool.page_size, ps)
+    prompt = export.prompt
+    n_logical = -(-total_len // ps)
+    n_prompt = len(export.pages)
+    assert 0 < len(prompt) <= total_len and n_logical >= n_prompt
+
+    shared: List[int] = []
+    if share and index is not None:
+        n_full = len(prompt) // ps
+        full, _ = index.match(prompt[: n_full * ps])
+        # full-page adoption only: decode writes from len(prompt) on, which
+        # never lands inside the first len(prompt) // ps pages, so adopted
+        # pages stay immutable; a partial last prompt page *will* be written
+        # and must come from the stream into a private page
+        shared = list(full)
+    for pid in shared:
+        pool.retain(pid)
+
+    n_new = n_logical - len(shared)
+    if pool.free_count < n_new:
+        if index is not None:
+            index.evict(n_new - pool.free_count)
+        if pool.free_count < n_new:
+            for pid in shared:
+                pool.release(pid)
+            if share and index is not None and shared:
+                return import_pages(pool, index, export, total_len, share=False)
+            return None
+    new_pages = pool.alloc(n_new)
+    assert new_pages is not None
+    plan = AdmissionPlan(
+        reuse_len=len(shared) * ps, shared=shared, cow_src=None,
+        new_pages=new_pages,
+    )
+    remap = {
+        src: plan.pages[j]
+        for j, src in enumerate(export.pages)
+        if j >= len(shared)
+    }
+    return PageImport(plan=plan, remap=remap, adopted=len(shared))

@@ -45,6 +45,7 @@ class Request:
     state: str = QUEUED
     generated: List[int] = field(default_factory=list)
     t_submit: float = 0.0
+    t_prefill_done: float = 0.0  # first token sampled: prefill→decode handoff
     t_finish: float = 0.0
 
     @property
@@ -110,6 +111,13 @@ class RequestScheduler:
         req.t_finish = time.perf_counter()
         self._running -= 1
 
+    def prefill_done(self, req: Request) -> None:
+        """Timestamp the prefill→decode handoff of a RUNNING request (the
+        disaggregated engine calls this when the page block is streamed);
+        the request stays RUNNING until decode finishes it."""
+        assert req.state == RUNNING
+        req.t_prefill_done = time.perf_counter()
+
     def requeue(self, req: Request) -> None:
         """Return a just-popped request to the queue head (admission found no
         pages for it this tick; FIFO order is preserved)."""
@@ -133,6 +141,48 @@ class RequestScheduler:
 
     def has_work(self) -> bool:
         return self.demand > 0
+
+
+@dataclass
+class Transfer:
+    """One finished prefill in flight between submeshes: the host manifest
+    (a :class:`~repro.serve.pages.PageExport`), the device-side page block
+    already ``device_put`` toward the decode submesh (jax transfers are
+    async — enqueueing at prefill completion overlaps the copy with further
+    prefill and decode work), and the owning request."""
+
+    export: Any
+    block: Any
+    request: Request
+
+
+class TransferQueue:
+    """Tick-level FIFO between the prefill and decode workers.
+
+    The prefill worker pushes a :class:`Transfer` the moment a prompt's
+    last chunk completes; the decode worker admits from the head whenever
+    it has a free slot *and* its pool can place the pages. Admission is
+    strictly in completion order — a transfer the decode pool cannot place
+    yet blocks the queue (it retries every tick), preserving the FIFO
+    fairness of the single-mesh engine. ``total`` counts lifetime pushes
+    for the engine's stats."""
+
+    def __init__(self) -> None:
+        self._q: deque[Transfer] = deque()
+        self.total = 0
+
+    def push(self, transfer: Transfer) -> None:
+        self._q.append(transfer)
+        self.total += 1
+
+    def peek(self) -> Optional[Transfer]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Transfer:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
 
 
 def _ladder_from_schedule(schedule: Schedule, max_slots: int) -> List[int]:

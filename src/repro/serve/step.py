@@ -114,6 +114,33 @@ def build_chunk_prefill_step(model: LanguageModel, *, donate: bool = True):
     return jax.jit(step, **kwargs)
 
 
+def build_page_export_step(model: LanguageModel):
+    """Page-streaming gather (disaggregated serving, prefill side): pull one
+    slot's prompt pages + recurrent state row out of the prefill pool as a
+    pool-size-free block ready for ``device_put`` to the decode submesh.
+    ``page_ids`` is always ``(max_pages,)`` (scratch-0 padded), so one
+    executable per engine covers every prompt length."""
+
+    def step(cache, page_ids, slot):
+        return model.paged_export_slot(cache, page_ids, slot)
+
+    return jax.jit(step)
+
+
+def build_page_import_step(model: LanguageModel, *, donate: bool = False):
+    """Page-streaming scatter (disaggregated serving, decode side): write a
+    streamed block into this pool at the remapped ``page_ids`` (0 routes a
+    lane to the scratch page: padding, or pages the local prefix index
+    already holds) and the state row at ``slot``. One executable per
+    engine."""
+
+    def step(cache, block, page_ids, slot):
+        return model.paged_import_slot(cache, block, page_ids, slot)
+
+    kwargs = {"donate_argnums": (0,)} if donate else {}
+    return jax.jit(step, **kwargs)
+
+
 def build_slot_decode_step(model: LanguageModel, *, donate: bool = True):
     """Fixed-shape decode tick over the slot ring (continuous batching).
 

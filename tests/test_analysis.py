@@ -112,6 +112,46 @@ def test_r104_negative_sorted_items():
     assert "R104" not in rules_fired(src, "repro/train/x.py")
 
 
+def test_r105_flags_device_put_outside_page_seam():
+    src = (
+        "import jax\n"
+        "def sneak_pages(block, dev):\n"
+        "    return jax.device_put(block, dev)\n"
+    )
+    assert "R105" in rules_fired(src, "repro/serve/x.py")
+    # module-level placement is just as much a bypass
+    src = "import jax\nBLOCK = jax.device_put(0, None)\n"
+    assert "R105" in rules_fired(src, "repro/serve/x.py")
+    # outside serve/, device placement is not R105's business
+    src = "import jax\ndef place(p, dev):\n    return jax.device_put(p, dev)\n"
+    assert "R105" not in rules_fired(src, "repro/train/x.py")
+
+
+def test_r105_negative_declared_seam_functions():
+    src = (
+        "import jax\n"
+        "class DisaggregatedEngine:\n"
+        "    def __init__(self, params, device):\n"
+        "        self.params = jax.device_put(params, device)\n"
+        "    def _stream(self, block):\n"
+        "        return jax.device_put(block, self.decode_device)\n"
+        "    def _helper(self):\n"
+        "        def inner(block):\n"
+        "            return jax.device_put(block, None)\n"
+        "        return inner\n"
+    )
+    # __init__ and _stream are the declared seam (nested defs included);
+    # _helper is not, even though it lives on the same class
+    assert "R105" in rules_fired(src, "repro/serve/engine.py")
+    fired = [
+        v
+        for v in lint_source(src, rel="repro/serve/engine.py").violations
+        if v.rule == "R105"
+    ]
+    assert len(fired) == 1
+    assert "_helper" in fired[0].message
+
+
 # ---------------------------------------------------------------------------
 # R2xx trace hazards
 # ---------------------------------------------------------------------------

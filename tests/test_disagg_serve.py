@@ -1,0 +1,200 @@
+"""Disaggregated prefill/decode serving: greedy token identity against the
+single-mesh ``PagedContinuousBatchingEngine`` (the repo's flagship serving
+guarantee now spans two device groups), property-tested under pool-pressure
+preemption and cross-pool prefix adoption, plus compile-count bounds for the
+split workers and submesh-pair construction errors."""
+import jax
+import numpy as np
+import pytest
+
+from tests._propcheck import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.launch.mesh import make_disagg_submeshes
+from repro.models import build_model
+from repro.serve import DisaggregatedEngine, PagedContinuousBatchingEngine
+
+# identity is contractual (unmarked) on the two attention configs the issue
+# names; rwkv rides along to cover recurrent-state-row streaming
+ARCHS = ["qwen2.5-3b", "gemma2-9b", "rwkv6-1.6b"]
+
+
+def _setup(arch, key=0):
+    cfg = get_config(arch, "smoke")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(key))
+    return cfg, model, params
+
+
+def _shared_prefix_prompts(cfg, n=6, prefix_len=9, suffix_len=3, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len)
+    out = [
+        np.asarray(
+            np.concatenate([prefix, rng.integers(0, cfg.vocab_size, suffix_len)]),
+            np.int32,
+        )
+        for _ in range(n)
+    ]
+    out.append(np.asarray(prefix, np.int32))  # fully-cached prompt (COW cap)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_matches_paged_greedy(arch):
+    """Greedy output of the disaggregated engine bit-equals the single-mesh
+    paged engine on every prompt: chunked prefill at the prefill ring shape,
+    the teacher-forced sub-chunk tail, the export gather -> device_put ->
+    import scatter seam, and decode-side prefix adoption must not perturb a
+    single argmax. Shared prefixes make cross-pool adoption actually fire."""
+    cfg, model, params = _setup(arch)
+    prompts = _shared_prefix_prompts(cfg, n=5)
+    ref = PagedContinuousBatchingEngine(
+        model, params, cache_len=64, max_slots=2, page_size=4, prefill_chunks=(4,)
+    )
+    ref_ids = [ref.submit(p, max_new_tokens=5) for p in prompts]
+    ref_out = ref.run()
+    eng = DisaggregatedEngine(
+        model, params, cache_len=64, max_slots=2, page_size=4,
+        prefill_chunks=(4,), prefill_slots=2,
+    )
+    ids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    out = eng.run()
+    for i, (rid, rrid) in enumerate(zip(ids, ref_ids)):
+        np.testing.assert_array_equal(out[rid], ref_out[rrid], err_msg=f"request {i}")
+    # every multi-token request crossed the seam as one streamed transfer
+    assert eng.stats["transfers"] == len(prompts)
+    assert eng.stats["pages_streamed"] > 0
+    if eng.prefix_sharing:
+        # the shared prefix is adopted decode-side by reference after the
+        # first transfer publishes it — not re-streamed byte-for-byte
+        assert eng.stats["pages_adopted"] > 0
+        assert eng.stats["prefix_tokens_reused"] > 0
+    # both pools drained; published pages live on only under their indices
+    eng.prefill.pool.check()
+    eng.decode.pool.check()
+    for worker in (eng.prefill, eng.decode):
+        held = worker.index.num_pages if worker.index is not None else 0
+        assert worker.pool.used == held
+
+
+def _pressure_pair():
+    """One (reference, disagg) engine pair with deliberately tight pools:
+    prefill fits ~one prompt at a time (admission requeue), decode fits ~one
+    resident request (transfers queue at the seam). Built once — identity
+    must also hold across back-to-back run() calls with persistent radix
+    indices, and reusing the pair keeps the property test's compile cost to
+    one engine pair total."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    ref = PagedContinuousBatchingEngine(
+        model, params, cache_len=32, max_slots=2, page_size=4,
+        prefill_chunks=(4,), num_pages=10,
+    )
+    eng = DisaggregatedEngine(
+        model, params, cache_len=32, max_slots=2, page_size=4,
+        prefill_chunks=(4,), prefill_slots=2, num_pages=10, prefill_pages=5,
+    )
+    return cfg, ref, eng
+
+
+_PAIR = []
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_disagg_identity_under_pressure_random_workloads(seed):
+    """Property: identity survives randomized prompt lengths, shared-prefix
+    divergence points, and per-request budgets on pools small enough that
+    prefill admission requeues and streamed transfers wait at the seam
+    (mid-stream preemption). Single-token budgets (which never cross the
+    seam) and 1-token prompts (pure teacher-forced prefill) are in-range."""
+    if not _PAIR:
+        _PAIR.append(_pressure_pair())
+    cfg, ref, eng = _PAIR[0]
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, rng.integers(0, 9))
+    prompts, budgets = [], []
+    for _ in range(int(rng.integers(2, 7))):
+        take = int(rng.integers(0, len(prefix) + 1)) if len(prefix) else 0
+        suffix = rng.integers(0, cfg.vocab_size, int(rng.integers(1, 9)))
+        prompts.append(np.concatenate([prefix[:take], suffix]).astype(np.int32))
+        budgets.append(int(rng.integers(1, 6)))
+
+    ref_ids = [ref.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    ref_out = ref.run()
+    ids = [eng.submit(p, max_new_tokens=b) for p, b in zip(prompts, budgets)]
+    out = eng.run()
+    assert set(out) == set(ids), "a requeued or queued-transfer request was dropped"
+    for i, (rid, rrid) in enumerate(zip(ids, ref_ids)):
+        np.testing.assert_array_equal(
+            out[rid], ref_out[rrid],
+            err_msg=f"seed {seed} request {i} (len {len(prompts[i])}, "
+                    f"budget {budgets[i]})",
+        )
+    ref.pool.check()
+    eng.prefill.pool.check()
+    eng.decode.pool.check()
+    assert len(eng.transfers) == 0
+
+
+def test_disagg_split_compile_budgets():
+    """The decode worker compiles NO chunk-prefill variants (one decode
+    executable per ladder stage, period) and the prefill worker exactly one
+    tail tick at its fixed ring width plus one executable per chunk bucket —
+    the whole point of the split."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    eng = DisaggregatedEngine(
+        model, params, cache_len=64, max_slots=4, b1=1, rho=2.0, patience=2,
+        page_size=4, prefill_chunks=(4, 8), prefill_slots=2,
+    )
+    rng = np.random.default_rng(3)
+    lengths = rng.integers(1, 24, size=10)
+    ids = [
+        eng.submit(rng.integers(0, cfg.vocab_size, n), max_new_tokens=4)
+        for n in lengths
+    ]
+    out = eng.run()
+    assert set(ids) == set(out)
+    # decode worker: pure fixed-shape ticks behind the ladder
+    assert eng.decode._chunk_steps == {} and eng.decode.prefill_chunks == ()
+    assert set(eng.decode._decodes) <= {1, 2, 4}
+    assert eng.decode_compiles == len(eng.decode._decodes)
+    assert all(s._cache_size() == 1 for s in eng.decode._decodes.values())
+    # prefill worker: chunk buckets + exactly one tail tick at ring width
+    assert eng.prefill_compiles <= len(eng.prefill.prefill_chunks)
+    assert set(eng.prefill._decodes) <= {eng.prefill_slots}
+    assert all(s._cache_size() == 1 for s in eng.prefill._decodes.values())
+    # re-serving at known shapes adds no executables
+    eng.submit(rng.integers(0, cfg.vocab_size, 13), max_new_tokens=3)
+    eng.run()
+    assert eng.prefill_compiles <= len(eng.prefill.prefill_chunks)
+    assert all(s._cache_size() == 1 for s in eng.decode._decodes.values())
+
+
+def test_disagg_rejects_encoder_decoder():
+    """Per-request encoder memory is dense per-slot state — it does not
+    page-stream, and the engine must say so instead of serving garbage."""
+    cfg, model, params = _setup("whisper-tiny")
+    with pytest.raises(NotImplementedError, match="encoder-decoder"):
+        DisaggregatedEngine(model, params, cache_len=32)
+
+
+def test_make_disagg_submeshes_validates():
+    with pytest.raises(ValueError, match="must each be >= 1"):
+        make_disagg_submeshes(prefill_pods=0, decode_pods=1)
+    # host test processes run 1 visible device: an 8-device ask must name
+    # the XLA_FLAGS remedy rather than build overlapping submeshes
+    if len(jax.devices()) < 8:
+        with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+            make_disagg_submeshes(prefill_pods=4, decode_pods=4)
+
+
+def test_make_disagg_submeshes_disjoint_when_devices_allow():
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >= 2 devices (CI serve-disagg job runs 8)")
+    pre, dec = make_disagg_submeshes(prefill_pods=1, decode_pods=len(devs) - 1)
+    pre_ids = {d.id for d in pre.devices.flat}
+    dec_ids = {d.id for d in dec.devices.flat}
+    assert not pre_ids & dec_ids
+    assert pre.axis_names == dec.axis_names == ("pod", "data", "model")

@@ -209,6 +209,48 @@ def test_paged_mixed_lengths_and_budgets():
     assert engine.pool.used == engine.index.num_pages  # only published pages live
 
 
+def test_requeued_request_survives_one_page_pool():
+    """Regression: on a 1-page pool every admission beyond the first is
+    requeued until the resident request releases its page — including a
+    requeue that lands on what would otherwise be the final tick. The run
+    must drain the requeue list before declaring the pool idle; dropping the
+    tail request (or raising) loses a submitted result."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    # capacity 1 page of 8: each request (4 prompt + 3 new = 7 positions)
+    # needs exactly that page, so the ring serves strictly one at a time
+    engine = PagedContinuousBatchingEngine(
+        model, params, cache_len=8, max_slots=2, page_size=8, num_pages=2,
+        prefill_chunks=(4,), prefix_cache=False,
+    )
+    prompts = np.asarray(
+        jax.random.randint(jax.random.key(1), (3, 4), 0, cfg.vocab_size)
+    )
+    ids = [engine.submit(p, max_new_tokens=3) for p in prompts]
+    out = engine.run()
+    assert set(out) == set(ids), "a requeued request was dropped at the drain"
+    static = ServeEngine(model, params, cache_len=8)
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(
+            out[rid], static.generate(prompts[i][None, :], max_new_tokens=3)[0]
+        )
+    engine.pool.check()
+    assert engine.pool.used == 0
+
+
+def test_request_larger_than_pool_raises_not_hangs():
+    """A request whose footprint exceeds the whole pool (even after full
+    index eviction) must fail loudly at admission — the complement of the
+    requeue-drain guarantee above."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    engine = PagedContinuousBatchingEngine(
+        model, params, cache_len=16, max_slots=2, page_size=4, num_pages=2,
+        prefill_chunks=(4,),
+    )
+    engine.submit(np.arange(6, dtype=np.int32) % cfg.vocab_size, max_new_tokens=2)
+    with pytest.raises(RuntimeError, match="cannot fit"):
+        engine.run()
+
+
 def test_paged_sampling_params_per_slot():
     """top_k=1 reduces to greedy (identical to static); temperature sampling
     is reproducible per engine seed and stays in-vocab."""

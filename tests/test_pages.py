@@ -22,8 +22,11 @@ import pytest
 from tests._propcheck import given, settings, strategies as st
 
 from repro.serve.pages import (
+    PageExport,
     PagePool,
     RadixPrefixIndex,
+    export_pages,
+    import_pages,
     plan_admission,
     publish_prefix,
     release_pages,
@@ -196,6 +199,187 @@ def test_partial_match_tie_break_is_publish_order_independent():
     assert (full_ab, full_ba) == ([1], [2])
     assert partial_ab == partial_ba, "COW source depends on publish order"
     assert partial_ab == (3, 2), "tie must resolve to the lowest page id"
+
+
+def test_plan_admission_unshared_fallback_breaks_cow_pin_wedge():
+    """Regression: a prefix hit pins its matched pages before eviction, so on
+    a small pool the hit itself can wedge admission — every evictable page is
+    pinned, the shared plan finds no room, yet nothing else holds pages. The
+    planner must fall back to an unshared replan (pins nothing, may evict the
+    whole index) instead of returning None and deadlocking the engine."""
+    pool = PagePool(4, 2)  # capacity 3
+    index = RadixPrefixIndex(pool)
+    a = plan_admission(pool, index, [1, 2, 3, 4], 4, share=True)
+    publish_prefix(index, [1, 2, 3, 4], a.pages)
+    release_pages(pool, a.pages)
+    assert index.num_pages == 2 and pool.free_count == 1
+
+    # diverge inside page 2: the match pins one shared full page plus the COW
+    # source — i.e. BOTH index pages — so with 2 new pages needed and 1 free,
+    # the eviction pass run for the shared plan can reclaim nothing
+    plan = plan_admission(pool, index, [1, 2, 3, 9, 9], 6, share=True)
+    assert plan is not None, "fallback must rescue the wedged shared plan"
+    assert plan.shared == [] and plan.reuse_len == 0 and plan.cow_src is None
+    assert len(plan.new_pages) == 3
+    assert index.num_pages == 0  # the unshared replan evicted the whole index
+    pool.check()
+    release_pages(pool, plan.pages)
+    pool.check()
+    assert pool.used == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-pool streaming (disaggregated serving)
+# ---------------------------------------------------------------------------
+
+
+def _page_content(prompt, j, ps):
+    """Host stand-in for logical page ``j``'s KV: attention KV at a position
+    is a function of the whole prefix through it, so equal content here iff
+    the real device pages would be bit-equal too."""
+    return tuple(prompt[: min((j + 1) * ps, len(prompt))])
+
+
+def test_import_adopts_published_full_pages():
+    """Deterministic adoption semantics: a transfer whose full-page prefix is
+    already resident adopts those pages by reference — they are absent from
+    the remap (their streamed lanes route to scratch) — while the partial
+    last prompt page always arrives by stream into a private page."""
+    pool = PagePool(16, 4)
+    index = RadixPrefixIndex(pool)
+    prompt = list(range(1, 11))  # 2 full pages + 2-token tail
+    export = PageExport(prompt=prompt, pages=[5, 6, 7], page_size=4, first_token=0)
+
+    imp1 = import_pages(pool, index, export, 14, share=True)
+    assert imp1.adopted == 0 and len(imp1.plan.pages) == 4  # ceil(14/4)
+    # no local prefix: every streamed lane remaps to a fresh private page
+    assert [imp1.remap[s] for s in export.pages] == imp1.plan.pages[:3]
+    publish_prefix(index, prompt, imp1.plan.pages)
+
+    imp2 = import_pages(pool, index, export, 14, share=True)
+    assert imp2.adopted == 2
+    assert imp2.plan.pages[:2] == imp1.plan.pages[:2]  # by reference
+    assert set(imp2.remap) == {7}  # only the partial page re-streams
+    assert imp2.remap[7] not in imp1.plan.pages
+
+    for imp in (imp1, imp2):
+        release_pages(pool, imp.plan.pages)
+    index.evict(pool.capacity)
+    pool.check()
+    assert pool.used == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    page_size=st.sampled_from([1, 2, 4]),
+    share=st.sampled_from([True, False]),
+)
+def test_export_remap_import_roundtrip_random_layouts(seed, page_size, share):
+    """Property: export -> stream -> remap -> import preserves page contents,
+    re-establishes refcounts in the destination pool exactly (cross-checked
+    against the independent reference model), and keeps every imported prompt
+    reachable through the destination radix index — under random COW /
+    shared-prefix prefill layouts, pool pressure on both sides, and deferred
+    (requeued) imports."""
+    rng = random.Random(seed)
+    ps = page_size
+    prefill_pool, decode_pool = PagePool(8, ps), PagePool(12, ps)
+    prefill_index = RadixPrefixIndex(prefill_pool) if share else None
+    decode_index = RadixPrefixIndex(decode_pool) if share else None
+    prefill_mem, decode_mem = {}, {}  # physical id -> content tuple
+    roots = [
+        [rng.randrange(16) for _ in range(rng.randint(1, 3 * ps))] for _ in range(3)
+    ]
+    transfers = []  # FIFO, like the engine's TransferQueue
+    live_imports = {}  # slot -> destination plan
+    next_slot = adoptions = 0
+
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45:  # prefill: plan, "compute", publish, export, release
+            root = rng.choice(roots)
+            cut = rng.randint(0, len(root))
+            prompt = root[:cut] + [rng.randrange(16) for _ in range(rng.randint(1, 4))]
+            if len(prompt) > prefill_pool.capacity * ps:
+                continue  # would exceed the pool even after full eviction
+            plan = plan_admission(
+                prefill_pool, prefill_index, prompt, len(prompt), share=share
+            )
+            if plan is None:
+                prefill_pool.check()
+                continue
+            for j, pid in enumerate(plan.pages):
+                if j < len(plan.shared):  # prefix hit: KV must already match
+                    assert prefill_mem[pid] == _page_content(prompt, j, ps)
+                else:
+                    prefill_mem[pid] = _page_content(prompt, j, ps)
+            publish_prefix(prefill_index, prompt, plan.pages)
+            export = export_pages(
+                plan, prompt, page_size=ps, first_token=rng.randrange(16)
+            )
+            assert len(export.pages) == -(-len(prompt) // ps)
+            # the "device_put": a bit-exact snapshot of the streamed lanes,
+            # taken before the source pages can be reallocated
+            block = {src: prefill_mem[src] for src in export.pages}
+            release_pages(prefill_pool, plan.pages)
+            transfers.append((export, block, len(prompt) + rng.randint(1, 4)))
+        elif op < 0.8 and transfers:  # decode: adopt the queue head
+            export, block, total = transfers[0]
+            if total > decode_pool.capacity * ps:
+                transfers.pop(0)  # engine would raise; drop from the model
+                continue
+            imp = import_pages(decode_pool, decode_index, export, total, share=share)
+            if imp is None:
+                decode_pool.check()  # deferred: head stays queued (FIFO)
+                continue
+            transfers.pop(0)
+            prompt = export.prompt
+            n_full = len(prompt) // ps
+            assert imp.adopted <= n_full
+            assert set(imp.remap) == set(export.pages[imp.adopted :])
+            for j, src in enumerate(export.pages):
+                dst = imp.plan.pages[j]
+                if src in imp.remap:
+                    assert imp.remap[src] == dst  # logical order preserved
+                    decode_mem[dst] = block[src]
+                else:  # adopted by reference: identical KV already resident
+                    assert j < imp.adopted
+                    assert decode_mem[dst] == _page_content(prompt, j, ps)
+            publish_prefix(decode_index, prompt, imp.plan.pages)
+            if decode_index is not None and n_full:
+                # radix reachability: the prompt's full pages resolve to
+                # exactly this import's placement
+                full, _ = decode_index.match(prompt[: n_full * ps])
+                assert full == imp.plan.pages[:n_full]
+            live_imports[next_slot] = imp.plan
+            next_slot += 1
+            adoptions += imp.adopted
+        elif live_imports:  # decode finish: pages return to the pool
+            slot = rng.choice(list(live_imports))
+            release_pages(decode_pool, live_imports.pop(slot).pages)
+        elif decode_index is not None:
+            decode_index.evict(rng.randint(1, 3))
+
+        # structural invariants after every operation, on BOTH pools: free
+        # lists exact, and the destination refcounts rebuilt by import match
+        # the independent model (imports hold one ref per plan page + one per
+        # index entry — never a reference into the source pool)
+        prefill_pool.check()
+        decode_pool.check()
+        assert prefill_pool.refs == _refcount_model(prefill_pool, prefill_index, {})
+        assert decode_pool.refs == _refcount_model(
+            decode_pool, decode_index, live_imports
+        )
+
+    for slot in list(live_imports):
+        release_pages(decode_pool, live_imports.pop(slot).pages)
+    for pool, index in ((prefill_pool, prefill_index), (decode_pool, decode_index)):
+        if index is not None:
+            index.evict(pool.capacity)
+            assert index.num_pages == 0
+        pool.check()
+        assert pool.used == 0, "pages leaked across the streaming seam"
 
 
 def test_eviction_respects_live_references():
