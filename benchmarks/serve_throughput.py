@@ -61,6 +61,8 @@ import numpy as np
 from benchmarks._schema import Record, print_csv
 from repro.configs import get_config
 from repro.models import build_model
+from repro.obs import Tracer
+from repro.obs.metrics import nearest_rank
 from repro.serve import (
     ContinuousBatchingEngine,
     DisaggregatedEngine,
@@ -107,11 +109,12 @@ def _pct(lat, q):
     """Nearest-rank percentile: the smallest observed value with at least
     q% of samples at or below it — always an actual measurement (np's
     default linear interpolation invents latencies between samples, and at
-    small n its p99 understates the true worst tail)."""
-    xs = np.sort(np.asarray(lat, dtype=np.float64))
-    assert xs.size > 0
-    rank = int(np.ceil(q / 100.0 * xs.size))
-    return float(xs[max(rank, 1) - 1])
+    small n its p99 understates the true worst tail). Delegates to
+    :func:`repro.obs.metrics.nearest_rank` so the benchmark, the metrics
+    registry, and tools/trace_view.py all report the same number for the
+    same samples."""
+    assert len(lat) > 0
+    return nearest_rank([float(x) for x in lat], q)
 
 
 def _bench_static(model, params, prompts) -> tuple[float, list]:
@@ -210,10 +213,21 @@ def _interfere_timed(engine, shorts, longs):
     engine.run()
     elapsed = time.perf_counter() - t0
     ticks = list(engine.stats["decode_tick_s"])
+    if engine.tracer.enabled:
+        # the tracer's serve.decode_tick spans and stats["decode_tick_s"]
+        # share one clock read per tick, so the durations are the SAME
+        # floats — any drift means an instrumentation site forked the timing
+        traced = engine.tracer.durations("serve.decode_tick")
+        assert traced == ticks, (
+            f"tracer decode_tick spans ({len(traced)}) drifted from "
+            f"stats['decode_tick_s'] ({len(ticks)})"
+        )
+        ticks = traced
+        engine.tracer.clear()  # pass isolation, like reset_stats below
     full_lat = [engine.scheduler.requests[r].latency for r in sids]
     streaming = {
         k: engine.stats[k]
-        for k in ("transfers", "pages_streamed", "pages_adopted")
+        for k in ("transfers", "pages_streamed", "pages_adopted", "seam_bytes")
         if k in engine.stats
     }
     engine.admission.reset()
@@ -246,13 +260,13 @@ def _interfere_child() -> dict:
         "paged": PagedContinuousBatchingEngine(
             model, params, cache_len=I_CACHE, max_slots=I_SLOTS,
             page_size=PAGE_SIZE, prefill_chunks=I_CHUNK_INTERLEAVED,
-            prefix_cache=False,
+            prefix_cache=False, tracer=Tracer(),
         ),
         "disagg": DisaggregatedEngine(
             model, params, cache_len=I_CACHE, max_slots=I_SLOTS,
             page_size=PAGE_SIZE, prefill_chunks=I_CHUNK_DISAGG,
             prefill_slots=2, prefill_device=devs[0], decode_device=devs[-1],
-            prefix_cache=False,
+            prefix_cache=False, tracer=Tracer(),
         ),
     }
     for engine in engines.values():

@@ -35,6 +35,11 @@ _STATE_PATHS = (
     "repro/data/",
     "repro/distributed/",
     "repro/optim/",
+    # serving timestamps feed request-lifecycle accounting and the obs
+    # tracer feeds every benchmark: both must draw time only through the
+    # injected-clock seam (see the R103 hint) so traces are replayable
+    "repro/serve/",
+    "repro/obs/",
 )
 
 _WALLCLOCK_CALLS = {
@@ -122,7 +127,13 @@ class AmbientEntropy(Rule):
         "kill-equivalence requires every stochastic or time-dependent input "
         "to live in checkpointed state: derive from the trainer's host_rng, "
         "a sample-offset fold_in key, or np.random.default_rng(seed) — never "
-        "from wall-clock or the process-global RNG."
+        "from wall-clock or the process-global RNG. Timing/telemetry code "
+        "uses the injected-clock idiom instead: accept "
+        "`clock: Callable[[], float] = time.perf_counter` as a default-arg "
+        "REFERENCE (never called here, so this rule stays clean) and read "
+        "time only through `self._clock()` / `tracer.clock()` — "
+        "repro.obs.trace.Tracer is the canonical seam, and tests swap in a "
+        "fake counter to make whole traces bit-reproducible."
     )
     applies = _STATE_PATHS
 

@@ -15,6 +15,8 @@ Static analysis pins the *shape* of the contracts; these hooks audit the
   (``analysis.contracts``): decode variants ⊆ the admission ladder, chunk
   prefill variants ⊆ ``prefill_chunks``, and exactly one executable per
   cached jitted step.
+- :func:`audit_tracer` — obs-overhead audit at run() boundaries: a disabled
+  tracer recorded zero events, and the synchronous span stack is balanced.
 
 Everything here is stdlib-only and duck-typed against the host objects, so
 importing this module costs nothing when the sanitizers are disabled; the
@@ -34,6 +36,7 @@ __all__ = [
     "check_finite_update",
     "audit_page_pool",
     "audit_engine_compiles",
+    "audit_tracer",
     "compile_counter",
 ]
 
@@ -194,6 +197,37 @@ def audit_engine_compiles(engine: Any, *, where: str = "") -> None:
                 f"chunk-prefill step for size {size} holds {n} executables "
                 f"{where} — expected exactly 1"
             )
+
+
+# ---------------------------------------------------------------------------
+# observability: tracer-overhead audit
+# ---------------------------------------------------------------------------
+
+
+def audit_tracer(tracer: Any, *, where: str = "") -> None:
+    """Audit the obs contract at a run() boundary (duck-typed, so any
+    tracer-shaped object works):
+
+    - a DISABLED tracer must have recorded zero events — the no-op path
+      really is a no-op, instrumentation cannot leak records (or cost)
+      into an untraced run;
+    - the synchronous span stack must be balanced (``depth == 0``): an
+      unclosed ``span()`` means a context manager was entered across the
+      run boundary and every later duration is nested garbage.
+    """
+    if not getattr(tracer, "enabled", True):
+        total = int(getattr(tracer, "events_total", 0))
+        if total != 0:
+            raise SanitizerError(
+                f"disabled tracer recorded {total} events {where} — an "
+                "instrumentation site bypassed the enabled check"
+            )
+    depth = int(getattr(tracer, "depth", 0))
+    if depth != 0:
+        raise SanitizerError(
+            f"tracer span stack unbalanced {where}: {depth} span(s) still "
+            "open at the run boundary"
+        )
 
 
 class compile_counter:

@@ -36,6 +36,8 @@ from repro.core.noise_scale import GradientNoiseScale
 from repro.core.schedules import Schedule
 from repro.core.stages import StageController, StepPlan
 from repro.data.pipeline import DataPipeline
+from repro.obs.metrics import NULL_METRICS, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.optim.base import Optimizer
 from repro.train.state import TrainState
 from repro.train.step import build_train_step
@@ -89,6 +91,8 @@ class SEBSTrainer:
         accum_mode: str = "deferred",
         grad_clip: float = 0.0,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.model = model
         self.optimizer = optimizer
@@ -97,6 +101,14 @@ class SEBSTrainer:
         self.mesh = mesh
         self.accum_mode = accum_mode
         self.grad_clip = grad_clip
+        # observability: no-op singletons unless attached; the trainer's
+        # only clock reads go through the tracer's injected seam (R103:
+        # no ambient wall-clock in core/), and instrumentation must not
+        # perturb the update path — losses stay bit-identical with metrics
+        # enabled (tests/test_obs.py)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._clock = self.tracer.clock
         # Host-side RNG for any non-data stochastic decision (sampling-with-
         # replacement datasets, stochastic eval triggers, ...). Data batches
         # themselves are keyed by sample offset, NOT by this generator — but
@@ -252,12 +264,28 @@ class SEBSTrainer:
                 # real kill (simulated preemption)
                 interrupted = True
                 break
+            t0 = self._clock()
             state = self._before_update(state, plan)
             batch = self._place_batch(self.pipeline.next_batch(plan.batch_size), plan)
             state, metrics = self._execute(state, batch, plan)
             update += 1
             state = self._after_update(state, update, plan)
-            loss = float(metrics["loss"])
+            loss = float(metrics["loss"])  # blocks: the update reached host
+            t1 = self._clock()
+            self.tracer.complete(
+                "train.update",
+                t0,
+                t1,
+                update=update,
+                stage=plan.stage,
+                batch=plan.batch_size,
+                loss=loss,
+            )
+            self.metrics.histogram(
+                "train.update_s", labels={"stage": plan.stage}
+            ).observe(t1 - t0)
+            self.metrics.counter("train.updates").inc()
+            self.metrics.counter("train.samples").inc(plan.batch_size)
             if sanitize.enabled():
                 sanitize.check_finite_update(
                     dict(metrics, loss=loss), update=update, stage=plan.stage
@@ -283,6 +311,18 @@ class SEBSTrainer:
                 comm_bytes, sync_events = self._comm_counters()
                 log.comm_bytes.append(comm_bytes)
                 log.sync_events.append(sync_events)
+                # re-export the cumulative comm ledger and the GNS EMA
+                # through the registry — the obs layer reads the SAME
+                # numbers TrainLog records, not a second count
+                self.metrics.gauge("train.comm_bytes").set(comm_bytes)
+                self.metrics.gauge("train.sync_events").set(sync_events)
+                self.metrics.gauge("train.gns").set(gns.b_noise)
+                if self.tracer.enabled:
+                    self.tracer.counter(
+                        "train.comm", bytes=comm_bytes, syncs=sync_events
+                    )
+                    if not np.isnan(gns.b_noise):  # NaN is invalid trace JSON
+                        self.tracer.counter("train.gns", b_noise=gns.b_noise)
             if checkpointer is not None and save_every:
                 # saves SNAP to the next checkpoint-consistent update rather
                 # than being dropped: local-SGD replicas are only consistent
@@ -293,6 +333,8 @@ class SEBSTrainer:
                     self._save(checkpointer, update, state, log, gns)
                     save_pending = False
         state = self._finalize(state)
+        if sanitize.enabled():
+            sanitize.audit_tracer(self.tracer, where="(train run end)")
         if checkpointer is not None:
             # farewell save unless this exact update was already persisted
             # (tracked explicitly: a periodic save can be SKIPPED when the

@@ -68,11 +68,14 @@ class ElasticTrainer(SEBSTrainer):
         param_axes=None,
         local_interval: int = 4,
         local_growth: float = 1.0,
+        tracer=None,
+        metrics=None,
     ):
         super().__init__(
             model, optimizer, schedule, pipeline,
             mesh=None, microbatch=microbatch, mode="accumulate",
             accum_mode="deferred", grad_clip=grad_clip, seed=seed,
+            tracer=tracer, metrics=metrics,
         )
         self.planner = ElasticMeshPlanner(device_budget=device_budget, devices=devices)
         self.sync = SyncScheduler(
@@ -127,6 +130,12 @@ class ElasticTrainer(SEBSTrainer):
         were drifting (local mode); then replicate or re-stack. Placement
         never changes values in exact mode — the invariant the width-
         equivalence tests pin down."""
+        with self.tracer.span(
+            "train.reshard", old=self._width or 0, new=mp.width, stage=stage
+        ):
+            return self._transition_inner(state, mp, stage)
+
+    def _transition_inner(self, state: TrainState, mp: MeshPlan, stage: int) -> TrainState:
         first_placement = self._width is None
         if self._stacked:  # leaving a local-SGD stage: one final average
             state = collapse_state(self._sync_step(self._width)(state))
@@ -202,6 +211,9 @@ class ElasticTrainer(SEBSTrainer):
         if self.sync.due(update, self._last_sync, plan.stage):
             state = self._sync_step(mp.width)(state)
             self._last_sync = update
+            # local-SGD averages are rare by design: worth a point event
+            # (exact-mode per-update syncs are implied by every span)
+            self.tracer.instant("train.sync", update=update, stage=plan.stage)
             collectives, bytes_moved = sync_cost(
                 "local", mp.width,
                 grad_bytes=self._grad_bytes, state_bytes=self._state_bytes,

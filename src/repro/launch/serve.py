@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_disagg_submeshes
 from repro.models import build_model
+from repro.obs import MetricsRegistry, Tracer
 from repro.serve import (
     ContinuousBatchingEngine,
     DisaggregatedEngine,
@@ -79,6 +80,14 @@ def main() -> None:
     ap.add_argument("--prefill-pages", type=int, default=None,
                     help="disagg: prefill pool size in pages (default: "
                          "prompt-dense-equivalent for the prefill ring)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(per-request lifecycle spans, per-tick spans and "
+                         "counters; open in Perfetto, summarize with "
+                         "tools/trace_view.py)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the metrics registry snapshot (counters, "
+                         "gauges, histogram percentiles) as JSON")
     args = ap.parse_args()
 
     for flag, value, low in (
@@ -116,6 +125,9 @@ def main() -> None:
         ap.error(f"--pages must be >= 2 (pool reserves scratch page 0; got {args.pages})")
     if args.engine == "static" and args.b1 is not None:
         ap.error("--b1 requires --engine continuous or paged")
+    if args.engine == "static" and (args.trace or args.metrics):
+        ap.error("--trace/--metrics require a scheduled engine "
+                 "(--engine continuous, paged, or disagg)")
     if args.engine not in ("paged", "disagg"):
         if args.pages is not None:
             ap.error("--pages requires --engine paged or disagg")
@@ -149,6 +161,10 @@ def main() -> None:
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
 
+    tracer = Tracer() if args.trace else None
+    metrics = MetricsRegistry() if args.metrics else None
+    obs_kwargs = {"tracer": tracer, "metrics": metrics}
+
     if args.engine == "static":
         engine = ServeEngine(model, params, cache_len=args.cache_len)
         prompts = np.asarray(
@@ -174,6 +190,7 @@ def main() -> None:
             prefill_slots=args.prefill_slots, prefill_pages=args.prefill_pages,
             prefill_device=prefill_mesh.devices.flat[0],
             decode_device=decode_mesh.devices.flat[0],
+            **obs_kwargs,
         )
         log.info(
             "disagg submeshes: prefill %s on %s | decode %s on %s",
@@ -190,11 +207,13 @@ def main() -> None:
             prefix_cache=args.prefix_cache,
             prefill_chunks=tuple(args.chunk) if args.chunk else (32,),
             kernel=args.kernel,
+            **obs_kwargs,
         )
     else:
         engine = ContinuousBatchingEngine(
             model, params, cache_len=args.cache_len, max_slots=args.slots,
             b1=args.b1, rho=args.rho, patience=args.patience,
+            **obs_kwargs,
         )
     prompts = np.asarray(
         jax.random.randint(jax.random.key(1), (args.requests, args.prompt_len), 0, cfg.vocab_size)
@@ -231,12 +250,21 @@ def main() -> None:
         )
     if args.engine == "disagg":
         log.info(
-            "streamed %d transfer(s), %d page(s) | adopted %d page(s) "
-            "decode-side | prefill pool peak %d/%d",
+            "streamed %d transfer(s), %d page(s), %d KiB over the seam | "
+            "adopted %d page(s) decode-side | prefill pool peak %d/%d",
             engine.stats["transfers"], engine.stats["pages_streamed"],
+            engine.stats["seam_bytes"] // 1024,
             engine.stats["pages_adopted"],
             mem["prefill_pages_peak"], mem["prefill_pages_capacity"],
         )
+    if tracer is not None:
+        tracer.dump_chrome(args.trace)
+        log.info("chrome trace (%d events, %d dropped) written to %s — "
+                 "open in ui.perfetto.dev or summarize with tools/trace_view.py",
+                 len(tracer.events), tracer.dropped, args.trace)
+    if metrics is not None:
+        metrics.dump(args.metrics)
+        log.info("metrics snapshot (%d series) written to %s", len(metrics), args.metrics)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import SEBS, AdaptiveSEBS, ClassicalStagewise, SEBSTrainer
+from repro.obs import MetricsRegistry, Tracer
 from repro.data import DataPipeline, TokenDataset
 from repro.models import build_model
 from repro.optim import make_optimizer
@@ -86,6 +87,14 @@ def main() -> None:
                          "(simulated preemption, used by the CI resume smoke job)")
     ap.add_argument("--log-json", default=None,
                     help="dump the train log (losses, stages, GNS trajectory) as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(per-update spans with stage/batch/loss, comm and "
+                         "GNS counters; open in Perfetto, summarize with "
+                         "tools/trace_view.py)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="dump the metrics registry snapshot (per-stage "
+                         "update-time histograms, comm gauges) as JSON")
     ap.add_argument("--steps-log", type=int, default=5)
     args = ap.parse_args()
 
@@ -147,6 +156,9 @@ def main() -> None:
         schedule = AdaptiveSEBS(b1=args.b1, eta=args.eta, rho_max=args.rho,
                                 total=args.c1 * args.stages)
 
+    tracer = Tracer() if args.trace else None
+    metrics = MetricsRegistry() if args.metrics else None
+
     ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
     if args.dp_elastic:
         from repro.distributed import ElasticTrainer
@@ -156,11 +168,13 @@ def main() -> None:
             microbatch=args.b1, sync_mode=args.sync_mode,
             device_budget=args.device_budget,
             local_interval=args.local_interval, local_growth=args.local_growth,
+            tracer=tracer, metrics=metrics,
         )
     else:
         trainer = SEBSTrainer(
             model, optimizer, schedule, DataPipeline(ds, mesh),
             mesh=mesh, microbatch=args.b1, mode=args.mode, accum_mode=args.accum_mode,
+            tracer=tracer, metrics=metrics,
         )
     params, _ = model.init(jax.random.key(0))
     state = TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
@@ -196,6 +210,13 @@ def main() -> None:
         with open(args.log_json, "w") as f:
             json.dump(tlog.as_dict(), f)
         log.info("train log written to %s", args.log_json)
+    if tracer is not None:
+        tracer.dump_chrome(args.trace)
+        log.info("chrome trace (%d events, %d dropped) written to %s",
+                 len(tracer.events), tracer.dropped, args.trace)
+    if metrics is not None:
+        metrics.dump(args.metrics)
+        log.info("metrics snapshot (%d series) written to %s", len(metrics), args.metrics)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,6 @@ Two engines share the model's prefill/decode cache path:
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from typing import Any, Dict, Optional, Tuple
 
@@ -27,6 +26,8 @@ import numpy as np
 
 from repro.analysis import sanitize
 from repro.models.lm import LanguageModel
+from repro.obs.metrics import NULL_METRICS, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.pages import (
     PagePool,
     RadixPrefixIndex,
@@ -115,6 +116,8 @@ class ContinuousBatchingEngine:
         patience: int = 2,
         admission: Optional[AdmissionController] = None,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.model = model
         self.params = params
@@ -125,7 +128,13 @@ class ContinuousBatchingEngine:
             max_slots=max_slots,
             patience=patience,
         )
-        self.scheduler = RequestScheduler()
+        # observability: no-op singletons unless a tracer/registry is
+        # attached; ALL engine clock reads route through the tracer's
+        # injected clock seam (R103: no ambient wall-clock in serve/)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._clock = self.tracer.clock
+        self.scheduler = RequestScheduler(clock=self._clock, tracer=self.tracer)
         # jax.jit caches prefill executables per prompt length internally
         self._prefill = build_prefill_step(model, donate=False)
 
@@ -167,13 +176,19 @@ class ContinuousBatchingEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         memory=None,
+        tag: str = "",
     ) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size + max_new_tokens <= self.cache_len, "cache_len too small"
         if self.model.cfg.is_encoder_decoder and memory is None:
             raise ValueError("encoder-decoder model requires per-request audio memory")
         return self.scheduler.submit(
-            prompt, max_new_tokens, temperature=temperature, top_k=top_k, memory=memory
+            prompt,
+            max_new_tokens,
+            temperature=temperature,
+            top_k=top_k,
+            memory=memory,
+            tag=tag,
         )
 
     # -- compiled-step caches ------------------------------------------------
@@ -254,6 +269,10 @@ class ContinuousBatchingEngine:
                         memory_buf, memory_row.astype(memory_buf.dtype), i, axis=0
                     )
                 slots.admit(i, req, first)
+                # dense prefill is synchronous: handoff + first token land
+                # together at admission
+                self.scheduler.prefill_done(req)
+                self.scheduler.first_token(req)
                 if len(req.generated) >= req.max_new_tokens:
                     self.scheduler.finish(req)
                     completed[req.id] = req.tokens()
@@ -262,6 +281,7 @@ class ContinuousBatchingEngine:
                 continue
 
             # 3. one fixed-shape decode tick over the whole ring
+            t_tick = self._clock()
             step = self._decode_for(width)
             self._rng, sub = jax.random.split(self._rng)
             nxt, cache, _ = step(
@@ -278,9 +298,30 @@ class ContinuousBatchingEngine:
             self.stats["ticks"] += 1
             self.stats["decoded_tokens"] += slots.num_active()
             self.stats["stage_history"].append(self.admission.stage)
+            nxt = np.asarray(nxt)  # block: the tick's tokens reach the host
+            if self.tracer.enabled:
+                t_now = self._clock()
+                self.tracer.complete(
+                    "serve.decode_tick",
+                    t_tick,
+                    t_now,
+                    width=width,
+                    decoded=slots.num_active(),
+                )
+                self.tracer.counter(
+                    "serve.queue",
+                    waiting=self.scheduler.num_waiting,
+                    running=self.scheduler.num_running,
+                )
+                self.tracer.counter(
+                    "serve.admission", stage=self.admission.stage, budget=width
+                )
+                self.metrics.histogram("serve.decode_tick_s").observe(t_now - t_tick)
+            self.metrics.counter("serve.decoded_tokens").inc(slots.num_active())
+            self.metrics.counter("serve.ticks").inc()
 
             # 4. bookkeeping: collect finished requests, free their slots
-            for i in slots.advance(np.asarray(nxt)):
+            for i in slots.advance(nxt):
                 req = slots.slots[i].request
                 self.scheduler.finish(req)
                 completed[req.id] = req.tokens()
@@ -288,6 +329,7 @@ class ContinuousBatchingEngine:
 
         if sanitize.enabled():
             sanitize.audit_engine_compiles(self, where="(run end)")
+            sanitize.audit_tracer(self.tracer, where="(run end)")
         return completed
 
     def latencies(self) -> Dict[int, float]:
@@ -342,6 +384,8 @@ class PagedContinuousBatchingEngine:
         prefix_cache: bool = True,
         prefill_chunks=(32,),
         kernel: str = "xla",
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if kernel not in ("xla", "pallas"):
             raise ValueError(f"kernel must be 'xla' or 'pallas', got {kernel!r}")
@@ -373,7 +417,10 @@ class PagedContinuousBatchingEngine:
             max_slots=max_slots,
             patience=patience,
         )
-        self.scheduler = RequestScheduler()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._clock = self.tracer.clock
+        self.scheduler = RequestScheduler(clock=self._clock, tracer=self.tracer)
         # device state: paged KV slab + full-width recurrent state, allocated
         # once — stage ramps only widen host arrays and the compiled tick
         self.cache = model.init_paged_cache(self.num_pages, page_size, max_slots)
@@ -435,6 +482,7 @@ class PagedContinuousBatchingEngine:
         temperature: float = 0.0,
         top_k: int = 0,
         memory=None,
+        tag: str = "",
     ) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         # same per-request bound as the dense engines (max_pages rounds
@@ -443,7 +491,12 @@ class PagedContinuousBatchingEngine:
         if self.model.cfg.is_encoder_decoder and memory is None:
             raise ValueError("encoder-decoder model requires per-request audio memory")
         return self.scheduler.submit(
-            prompt, max_new_tokens, temperature=temperature, top_k=top_k, memory=memory
+            prompt,
+            max_new_tokens,
+            temperature=temperature,
+            top_k=top_k,
+            memory=memory,
+            tag=tag,
         )
 
     # -- compiled-step caches ------------------------------------------------
@@ -513,6 +566,11 @@ class PagedContinuousBatchingEngine:
         slot = slots.slots[i]
         req = slot.request
         release_pages(self.pool, slot.plan.pages)
+        # a request finishing in the same tick it started decoding (tail
+        # path, max_new_tokens == 1) reaches here before the bookkeeping
+        # loop stamped its handoff; both stamps are idempotent
+        self.scheduler.prefill_done(req)
+        self.scheduler.first_token(req)
         self.scheduler.finish(req)
         completed[req.id] = req.tokens()
         slots.release(i)
@@ -582,7 +640,7 @@ class PagedContinuousBatchingEngine:
             # 3. one prefill chunk (round-robin over prefilling slots, so a
             #    long prompt neither stalls decode nor starves other
             #    prefills of their chunk turn)
-            t_tick = time.perf_counter()
+            t_tick = self._clock()
             prefilling = slots.prefilling_indices()
             self._chunk_rr += 1
             for i in prefilling[self._chunk_rr % max(len(prefilling), 1):] + \
@@ -615,6 +673,7 @@ class PagedContinuousBatchingEngine:
                 if slot.prompt_remaining == 0:
                     slots.start_decoding(i, self._sample_first(req, logits))
                     self.scheduler.prefill_done(req)
+                    self.scheduler.first_token(req)
                     self._maybe_publish(slots, i)
                     if len(req.generated) >= req.max_new_tokens:
                         self._finish(slots, i, completed)
@@ -642,13 +701,47 @@ class PagedContinuousBatchingEngine:
                 sub,
                 memory=memory_buf,
             )
+            n_decoded = int(active.sum()) - n_forced
             self.stats["ticks"] += 1
-            self.stats["decoded_tokens"] += int(active.sum()) - n_forced
+            self.stats["decoded_tokens"] += n_decoded
             self.stats["prefill_tokens_computed"] += n_forced
             self.stats["stage_history"].append(self.admission.stage)
             nxt = np.asarray(nxt)  # block: the tick's tokens reach the host
-            if int(active.sum()) - n_forced > 0:
-                self.stats["decode_tick_s"].append(time.perf_counter() - t_tick)
+            if n_decoded > 0:
+                # one clock read, shared by the stat deque and the trace
+                # span: percentiles derived from either source agree on
+                # the exact same floats
+                t_now = self._clock()
+                self.stats["decode_tick_s"].append(t_now - t_tick)
+                self.tracer.complete(
+                    "serve.decode_tick",
+                    t_tick,
+                    t_now,
+                    width=width,
+                    decoded=n_decoded,
+                    forced=n_forced,
+                )
+                self.metrics.histogram("serve.decode_tick_s").observe(t_now - t_tick)
+            if self.tracer.enabled:
+                self.tracer.counter(
+                    "serve.pool", used=self.pool.used, capacity=self.pool.capacity
+                )
+                self.tracer.counter(
+                    "serve.queue",
+                    waiting=self.scheduler.num_waiting,
+                    running=self.scheduler.num_running,
+                )
+                self.tracer.counter(
+                    "serve.admission", stage=self.admission.stage, budget=width
+                )
+                self.tracer.counter(
+                    "serve.prefix",
+                    reused=self.stats["prefix_tokens_reused"],
+                    total=self.stats["prompt_tokens_total"],
+                )
+            self.metrics.counter("serve.decoded_tokens").inc(n_decoded)
+            self.metrics.counter("serve.ticks").inc()
+            self.metrics.gauge("serve.pool_used").set(self.pool.used)
 
             # 5. bookkeeping: newly-decoding slots timestamp their handoff
             #    and publish their prefix, finished requests release pages
@@ -660,11 +753,15 @@ class PagedContinuousBatchingEngine:
                 if slot.free:
                     continue
                 if slot.decoding and slot.request.t_prefill_done == 0.0:
+                    # tail-path handoff: advance() appended the first token
+                    # inside this tick
                     self.scheduler.prefill_done(slot.request)
+                    self.scheduler.first_token(slot.request)
                 self._maybe_publish(slots, i)
 
         if sanitize.enabled():
             sanitize.audit_engine_compiles(self, where="(run end)")
+            sanitize.audit_tracer(self.tracer, where="(run end)")
         return completed
 
     # -- reporting -----------------------------------------------------------
@@ -894,6 +991,8 @@ class DisaggregatedEngine:
         prefill_pages: Optional[int] = None,
         prefill_device=None,
         decode_device=None,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if kernel not in ("xla", "pallas"):
             raise ValueError(f"kernel must be 'xla' or 'pallas', got {kernel!r}")
@@ -929,7 +1028,10 @@ class DisaggregatedEngine:
             max_slots=max_slots,
             patience=patience,
         )
-        self.scheduler = RequestScheduler()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self._clock = self.tracer.clock
+        self.scheduler = RequestScheduler(clock=self._clock, tracer=self.tracer)
         self.transfers = TransferQueue()
         # independent pools: decode sized like the single-mesh engine,
         # prefill sized to its own (smaller) ring — prompts only
@@ -980,7 +1082,7 @@ class DisaggregatedEngine:
     @staticmethod
     def _fresh_stats() -> Dict[str, Any]:
         stats = PagedContinuousBatchingEngine._fresh_stats()
-        stats.update(transfers=0, pages_streamed=0, pages_adopted=0)
+        stats.update(transfers=0, pages_streamed=0, pages_adopted=0, seam_bytes=0)
         return stats
 
     def reset_stats(self) -> None:
@@ -1009,11 +1111,12 @@ class DisaggregatedEngine:
         max_new_tokens: int = 16,
         temperature: float = 0.0,
         top_k: int = 0,
+        tag: str = "",
     ) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size + max_new_tokens <= self.cache_len, "cache_len too small"
         return self.scheduler.submit(
-            prompt, max_new_tokens, temperature=temperature, top_k=top_k
+            prompt, max_new_tokens, temperature=temperature, top_k=top_k, tag=tag
         )
 
     # -- the streaming seam --------------------------------------------------
@@ -1021,8 +1124,17 @@ class DisaggregatedEngine:
         """The one runtime cross-submesh transfer: commit an exported page
         block toward the decode device. jax transfers are async — the copy
         overlaps subsequent prefill chunks and decode ticks; the decode-side
-        import scatter synchronizes on arrival."""
-        return jax.device_put(block, self.decode_device)
+        import scatter synchronizes on arrival. Seam bytes are accounted
+        here — the span measures enqueue cost, not arrival (which the
+        adoption scatter pays)."""
+        nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(block))
+        self.stats["seam_bytes"] += nbytes
+        self.metrics.counter("serve.seam_bytes").inc(nbytes)
+        with self.tracer.span("serve.stream", bytes=nbytes):
+            out = jax.device_put(block, self.decode_device)
+        if self.tracer.enabled:
+            self.tracer.counter("serve.seam", cum_bytes=self.stats["seam_bytes"])
+        return out
 
     def _sample_first(self, req, logits):
         self._rng, sub = jax.random.split(self._rng)
@@ -1118,6 +1230,7 @@ class DisaggregatedEngine:
                 publish_prefix(self.prefill.index, req.prompt, slot.plan.pages)
             release_pages(self.prefill.pool, slot.plan.pages)
             self.scheduler.prefill_done(req)
+            self.scheduler.first_token(req)
             self.scheduler.finish(req)
             completed[req.id] = req.tokens()
             pslots.release(i)
@@ -1144,6 +1257,7 @@ class DisaggregatedEngine:
             req.generated.append(int(first))
             release_pages(self.prefill.pool, slot.plan.pages)
             self.scheduler.prefill_done(req)
+            self.scheduler.first_token(req)
             self.scheduler.finish(req)
             completed[req.id] = req.tokens()
             pslots.release(i)
@@ -1157,6 +1271,9 @@ class DisaggregatedEngine:
         block = self.prefill._export(self.prefill.cache, jnp.asarray(ids), jnp.int32(i))
         self.transfers.push(Transfer(export=export, block=self._stream(block), request=req))
         self.scheduler.prefill_done(req)
+        # the first token was sampled from the final chunk's logits just
+        # now — TTFT is the handoff, not the (later) decode-side adoption
+        self.scheduler.first_token(req)
         self.stats["transfers"] += 1
         self.stats["pages_streamed"] += len(export.pages)
         # prefill pages release immediately: the export gather above read the
@@ -1311,7 +1428,7 @@ class DisaggregatedEngine:
             #    ``stats["decode_tick_s"]`` in both engines.
             active = dslots.active_mask()
             if active.any():
-                t_tick = time.perf_counter()
+                t_tick = self._clock()
                 step = self.decode.decode_for(width)
                 self._rng, sub = jax.random.split(self._rng)
                 nxt, self.decode.cache = step(
@@ -1325,14 +1442,47 @@ class DisaggregatedEngine:
                     jnp.asarray(dslots.top_ks()),
                     sub,
                 )
+                n_decoded = int(active.sum())
                 self.stats["ticks"] += 1
-                self.stats["decoded_tokens"] += int(active.sum())
+                self.stats["decoded_tokens"] += n_decoded
                 self.stats["stage_history"].append(self.admission.stage)
                 nxt = np.asarray(nxt)  # block: tokens on host, pre-prefill
-                self.stats["decode_tick_s"].append(time.perf_counter() - t_tick)
+                # one clock read shared by the stat deque and the trace span
+                t_now = self._clock()
+                self.stats["decode_tick_s"].append(t_now - t_tick)
+                self.tracer.complete(
+                    "serve.decode_tick",
+                    t_tick,
+                    t_now,
+                    width=width,
+                    decoded=n_decoded,
+                )
+                self.metrics.histogram("serve.decode_tick_s").observe(t_now - t_tick)
+                self.metrics.counter("serve.decoded_tokens").inc(n_decoded)
+                self.metrics.counter("serve.ticks").inc()
                 # 5. finished requests release their decode-pool pages
                 for i in dslots.advance(nxt):
                     self._finish_decode(dslots, i, completed)
+            if self.tracer.enabled:
+                self.tracer.counter(
+                    "serve.pool",
+                    decode_used=self.decode.pool.used,
+                    prefill_used=self.prefill.pool.used,
+                )
+                self.tracer.counter(
+                    "serve.queue",
+                    waiting=self.scheduler.num_waiting,
+                    running=self.scheduler.num_running,
+                    transfers=len(self.transfers),
+                )
+                self.tracer.counter(
+                    "serve.admission", stage=self.admission.stage, budget=width
+                )
+                self.tracer.counter(
+                    "serve.prefix",
+                    reused=self.stats["prefix_tokens_reused"],
+                    total=self.stats["prompt_tokens_total"],
+                )
 
             # 6. chunk steps, then one teacher-forced tick for sub-chunk
             #    prompt tails; completions export + stream (adopted at the
@@ -1343,6 +1493,7 @@ class DisaggregatedEngine:
         if sanitize.enabled():
             sanitize.audit_engine_compiles(self.prefill, where="(run end, prefill)")
             sanitize.audit_engine_compiles(self.decode, where="(run end, decode)")
+            sanitize.audit_tracer(self.tracer, where="(run end)")
         return completed
 
     # -- reporting -----------------------------------------------------------

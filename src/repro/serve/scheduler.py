@@ -3,8 +3,14 @@
 Two host-side pieces:
 
 - :class:`RequestScheduler` — a FIFO admission queue plus per-request
-  lifecycle state (QUEUED → RUNNING → DONE) and wall-clock timestamps, so
-  the benchmark can report per-request latency percentiles.
+  lifecycle state (QUEUED → RUNNING → DONE) and monotonic lifecycle
+  timestamps (submit → admit → prefill_done → first_token → finish), so
+  benchmarks can report per-request, per-phase latency percentiles. The
+  scheduler is the single choke point for lifecycle transitions, so it is
+  also where the per-request trace spans are emitted: every transition
+  both stamps the request and (when a :class:`~repro.obs.trace.Tracer` is
+  attached) records the matching async trace event with the *same*
+  timestamp.
 - :class:`AdmissionController` — the serving mirror of the paper's SEBS
   batch schedule. Instead of growing the *training* batch ``bₛ = b₁ρˢ`` per
   stage, it grows the *active decode slot budget* geometrically under
@@ -13,6 +19,11 @@ Two host-side pieces:
   over the widening train batch, and — like the training-side
   ``StageController`` — each stage corresponds to exactly one compiled
   decode variant (the engine keys its jit cache on the stage's slot width).
+
+All clock reads go through the injected ``clock`` seam (a callable
+*reference*, ``time.perf_counter`` by default), so engines can substitute
+the tracer's clock — or a fake counter in tests — and lint rule R103's
+no-ambient-wallclock check stays clean.
 """
 from __future__ import annotations
 
@@ -20,13 +31,23 @@ import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.schedules import SEBS, Schedule
+from repro.obs.trace import NULL_TRACER, Tracer
 
 QUEUED, RUNNING, DONE = "queued", "running", "done"
+
+
+def _phase(t0: float, t1: float) -> float:
+    """Duration between two lifecycle stamps; NaN while either is unset
+    (0.0) — an unstamped phase must poison averages loudly, not silently
+    contribute a huge bogus number."""
+    if t0 == 0.0 or t1 == 0.0:
+        return float("nan")
+    return t1 - t0
 
 
 @dataclass
@@ -34,7 +55,9 @@ class Request:
     """One generation request. ``prompt`` is a (P,) int32 token array;
     ``temperature == 0`` means greedy; ``top_k == 0`` means full vocab.
     ``memory`` carries per-request encoder input (1, T, d) for
-    encoder-decoder models (whisper)."""
+    encoder-decoder models (whisper). ``tag`` is a free-form request class
+    ("interactive", "batch", a tenant id) that trace tooling groups
+    percentiles by."""
 
     id: int
     prompt: np.ndarray
@@ -42,10 +65,13 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     memory: Optional[Any] = None
+    tag: str = ""
     state: str = QUEUED
     generated: List[int] = field(default_factory=list)
     t_submit: float = 0.0
-    t_prefill_done: float = 0.0  # first token sampled: prefill→decode handoff
+    t_admit: float = 0.0  # popped from the queue into a RUNNING slot
+    t_prefill_done: float = 0.0  # prompt fully computed: prefill→decode handoff
+    t_first_token: float = 0.0  # first generated token sampled (TTFT stamp)
     t_finish: float = 0.0
 
     @property
@@ -58,6 +84,28 @@ class Request:
             return float("nan")
         return self.t_finish - self.t_submit
 
+    @property
+    def queue_s(self) -> float:
+        """Submit→admit wait. NaN until admitted (requeue un-stamps)."""
+        return _phase(self.t_submit, self.t_admit)
+
+    @property
+    def prefill_s(self) -> float:
+        """Admit→prefill_done compute time. NaN until the handoff."""
+        return _phase(self.t_admit, self.t_prefill_done)
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit→first-token — the SLO-grade time-to-first-token."""
+        return _phase(self.t_submit, self.t_first_token)
+
+    @property
+    def decode_s(self) -> float:
+        """First-token→finish decode time. NaN until DONE."""
+        if self.state != DONE:
+            return float("nan")
+        return _phase(self.t_first_token, self.t_finish)
+
     def tokens(self) -> np.ndarray:
         """Prompt + generated tokens, the (P + new,) result row."""
         return np.concatenate(
@@ -68,11 +116,17 @@ class Request:
 class RequestScheduler:
     """FIFO queue + lifecycle bookkeeping. Pure host-side Python."""
 
-    def __init__(self):
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.perf_counter,
+        tracer: Optional[Tracer] = None,
+    ):
         self._next_id = 0
         self._queue: deque[Request] = deque()
         self.requests: Dict[int, Request] = {}
         self._running = 0
+        self._clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def submit(
         self,
@@ -81,6 +135,7 @@ class RequestScheduler:
         temperature: float = 0.0,
         top_k: int = 0,
         memory=None,
+        tag: str = "",
     ) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert max_new_tokens >= 1
@@ -91,11 +146,19 @@ class RequestScheduler:
             temperature=float(temperature),
             top_k=int(top_k),
             memory=memory,
-            t_submit=time.perf_counter(),
+            tag=tag,
+            t_submit=self._clock(),
         )
         self._next_id += 1
         self._queue.append(req)
         self.requests[req.id] = req
+        self.tracer.begin_request(
+            req.id,
+            ts=req.t_submit,
+            prompt_len=int(prompt.size),
+            max_new_tokens=int(max_new_tokens),
+            tag=tag,
+        )
         return req.id
 
     def pop_waiting(self) -> Optional[Request]:
@@ -103,28 +166,50 @@ class RequestScheduler:
             return None
         req = self._queue.popleft()
         req.state = RUNNING
+        req.t_admit = self._clock()
         self._running += 1
+        self.tracer.mark_request(req.id, "admit", ts=req.t_admit)
         return req
 
     def finish(self, req: Request) -> None:
         req.state = DONE
-        req.t_finish = time.perf_counter()
+        req.t_finish = self._clock()
         self._running -= 1
+        self.tracer.end_request(req.id, ts=req.t_finish, tokens=len(req.generated))
 
     def prefill_done(self, req: Request) -> None:
         """Timestamp the prefill→decode handoff of a RUNNING request (the
         disaggregated engine calls this when the page block is streamed);
-        the request stays RUNNING until decode finishes it."""
+        the request stays RUNNING until decode finishes it. Idempotent —
+        only the first call stamps (engines hit multiple bookkeeping paths
+        for the same transition)."""
         assert req.state == RUNNING
-        req.t_prefill_done = time.perf_counter()
+        if req.t_prefill_done != 0.0:
+            return
+        req.t_prefill_done = self._clock()
+        self.tracer.mark_request(req.id, "prefill_done", ts=req.t_prefill_done)
+
+    def first_token(self, req: Request) -> None:
+        """Timestamp the first generated token (TTFT). Idempotent, and
+        legal on a request being finished in the same transition (single
+        token requests complete without a decode tick)."""
+        assert req.state in (RUNNING, DONE)
+        if req.t_first_token != 0.0:
+            return
+        req.t_first_token = self._clock()
+        self.tracer.mark_request(req.id, "first_token", ts=req.t_first_token)
 
     def requeue(self, req: Request) -> None:
         """Return a just-popped request to the queue head (admission found no
-        pages for it this tick; FIFO order is preserved)."""
+        pages for it this tick; FIFO order is preserved). The admit stamp is
+        cleared — the request is back to waiting, and its eventual
+        ``queue_s`` must cover the whole wait."""
         assert req.state == RUNNING
         req.state = QUEUED
+        req.t_admit = 0.0
         self._running -= 1
         self._queue.appendleft(req)
+        self.tracer.mark_request(req.id, "requeue")
 
     @property
     def num_waiting(self) -> int:

@@ -90,6 +90,32 @@ def test_r103_negative_seeded_generator_and_scope():
     assert "R103" not in rules_fired(src, "repro/launch/x.py")
 
 
+def test_r103_covers_serve_and_obs_paths():
+    """Serving timestamps feed request-lifecycle accounting and the tracer
+    feeds every benchmark: both paths are under R103, so an ambient
+    perf_counter CALL is flagged there like in any checkpointed path."""
+    src = "import time\ndef tick():\n    return time.perf_counter()\n"
+    assert "R103" in rules_fired(src, "repro/serve/x.py")
+    assert "R103" in rules_fired(src, "repro/obs/x.py")
+
+
+def test_r103_negative_injected_clock_reference():
+    """The idiom R103's hint prescribes: time.perf_counter passed as a
+    default-arg REFERENCE and read only through the injected seam — no
+    ast.Call on a wall-clock name, so the rule stays clean. This is how
+    repro.obs.trace.Tracer and the serve scheduler are written."""
+    src = (
+        "import time\n"
+        "class T:\n"
+        "    def __init__(self, clock=time.perf_counter):\n"
+        "        self._clock = clock\n"
+        "    def now(self):\n"
+        "        return self._clock()\n"
+    )
+    assert rules_fired(src, "repro/obs/x.py") == []
+    assert rules_fired(src, "repro/serve/x.py") == []
+
+
 def test_r104_flags_dict_order_fold():
     src = (
         "import jax\n"
@@ -525,6 +551,28 @@ def test_compile_counter_context_manager():
     with pytest.raises(sanitize.SanitizerError):
         with sanitize.compile_counter(eng):
             pass
+
+
+class _FakeTracer:
+    def __init__(self, enabled=True, events_total=0, depth=0):
+        self.enabled = enabled
+        self.events_total = events_total
+        self.depth = depth
+
+
+def test_tracer_audit_accepts_clean_states():
+    sanitize.audit_tracer(_FakeTracer(enabled=True, events_total=100, depth=0))
+    sanitize.audit_tracer(_FakeTracer(enabled=False, events_total=0, depth=0))
+
+
+def test_tracer_audit_rejects_disabled_tracer_with_events():
+    with pytest.raises(sanitize.SanitizerError, match="disabled tracer recorded 3"):
+        sanitize.audit_tracer(_FakeTracer(enabled=False, events_total=3), where="(t)")
+
+
+def test_tracer_audit_rejects_unbalanced_span_stack():
+    with pytest.raises(sanitize.SanitizerError, match="2 span"):
+        sanitize.audit_tracer(_FakeTracer(enabled=True, events_total=9, depth=2))
 
 
 def test_contracts_registry_shape():

@@ -229,3 +229,22 @@ def test_request_latency_guarded_until_done():
     req.state = DONE
     req.t_finish = req.t_submit + 0.125
     assert req.latency == pytest.approx(0.125)
+
+
+def test_engine_stamps_full_request_lifecycle():
+    """Every request served by the continuous engine carries real monotonic
+    lifecycle stamps (submit < admit ≤ prefill_done ≤ first_token < finish)
+    and the derived phase durations are finite and add up — the contract
+    the obs tracer and the SLO percentile reports are built on."""
+    cfg, model, params = _setup("qwen2.5-3b")
+    engine = ContinuousBatchingEngine(model, params, cache_len=64, max_slots=2)
+    prompts = np.asarray(jax.random.randint(jax.random.key(1), (4, 6), 0, cfg.vocab_size))
+    ids = [engine.submit(p, max_new_tokens=4) for p in prompts]
+    engine.run()
+    for rid in ids:
+        req = engine.scheduler.requests[rid]
+        assert 0.0 < req.t_submit < req.t_admit
+        assert req.t_admit <= req.t_prefill_done <= req.t_first_token < req.t_finish
+        for phase in (req.queue_s, req.prefill_s, req.ttft_s, req.decode_s):
+            assert np.isfinite(phase) and phase >= 0.0
+        assert req.ttft_s + req.decode_s == pytest.approx(req.latency)
